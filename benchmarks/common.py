@@ -1,0 +1,60 @@
+"""Shared helpers for the paper-table benchmarks.
+
+Conventions: every ``table*.py``/``fig*.py`` module exposes ``run(fast=True)``
+returning a list of row dicts and prints a CSV; ``benchmarks.run`` drives
+them all and writes ``experiments/bench/<name>.csv``.
+
+Scale note (DESIGN.md §3): the paper's absolute wall-clock speed-ups come
+from 4x V100s; this container has one CPU core.  Time-like columns therefore
+report (a) measured per-edge step time and (b) the schedule-derived speed-up
+``total_edges / max_device_edges``, the perfect-overlap bound realized by
+PAC's lockstep loop.  Partition-quality and downstream-quality columns are
+measured exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+import time
+
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def emit(name: str, rows: list[dict]) -> str:
+    """Print rows as CSV and persist to experiments/bench/<name>.csv."""
+    if not rows:
+        print(f"[{name}] no rows")
+        return ""
+    cols = list(rows[0].keys())
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=cols)
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: _fmt(v) for k, v in r.items()})
+    text = buf.getvalue()
+    print(f"==== {name} ====")
+    print(text)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.csv"), "w") as f:
+        f.write(text)
+    return text
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return v
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,39 @@
+"""Paper Fig.8 — effect of the number of devices/partitions N on
+downstream quality (more partitions => more deleted edges)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import edge_cut_fraction, sep_partition
+from repro.tig.data import synthetic_tig
+from repro.tig.distributed import pac_train
+from repro.tig.graph import chronological_split
+from repro.tig.models import TIGConfig
+from repro.tig.train import evaluate_params
+
+
+def run(fast: bool = True, dataset: str = "small"):
+    g = synthetic_tig(dataset, seed=0)
+    train_g, _, _, _ = chronological_split(g)
+    epochs = 2 if fast else 4
+    cfg = TIGConfig(flavor="tgn", dim=32, dim_time=16, dim_edge=g.dim_edge,
+                    dim_node=g.dim_node, num_neighbors=5, batch_size=100)
+    rows = []
+    for n in (2, 4) if fast else (2, 4, 8):
+        part = sep_partition(train_g.src, train_g.dst, train_g.t,
+                             g.num_nodes, n, k=0.05)
+        res = pac_train(train_g, part, cfg, num_devices=n, epochs=epochs,
+                        shuffle_parts=False)
+        ev = evaluate_params(g, cfg, res.params)
+        rows.append({
+            "num_devices": n,
+            "edge_cut%": 100 * edge_cut_fraction(part),
+            "ap_transductive": ev["test_ap"],
+            "derived_speedup": res.derived_speedup,
+        })
+    emit("fig8_num_parts", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,43 @@
+"""§Roofline report (deliverable g): aggregate the dry-run JSONs into the
+per-(arch x shape x mesh) roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(fast: bool = True):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            continue
+        rows.append({
+            "arch": d["arch"],
+            "shape": d["shape"],
+            "mesh": d["mesh"],
+            "compute_ms": 1e3 * d["compute_s"],
+            "memory_ms": 1e3 * d["memory_s"],
+            "collective_ms": 1e3 * d["collective_s"],
+            "dominant": d["dominant"],
+            "useful_ratio": d["useful_ratio"],
+            "hlo_flops": d["hlo_flops"],
+            "collective_bytes": d["collective_bytes"],
+        })
+    if not rows:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first")
+    emit("roofline_report", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

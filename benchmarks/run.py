@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast mode
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale settings
+    PYTHONPATH=src python -m benchmarks.run --only table6_partition_stats
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+MODULES = [
+    "table3_efficiency",
+    "table4_linkpred",
+    "table5_nodeclass",
+    "table6_partition_stats",
+    "table7_kl_compare",
+    "table8_partition_time",
+    "fig7_shuffle",
+    "fig8_num_parts",
+    "roofline_report",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    mods = [args.only] if args.only else MODULES
+    failures = []
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            mod.run(fast=not args.full)
+            print(f"[{name}] done in {time.perf_counter() - t0:.1f}s\n")
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

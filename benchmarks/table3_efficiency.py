@@ -1,0 +1,76 @@
+"""Paper Tab.III — training time & per-device memory vs top_k.
+
+For each top_k in {0, 1, 5, 10}% (+ HDRF + single-device):
+  * partition the training stream (SEP / HDRF),
+  * run one PAC epoch (4 simulated devices) measuring wall time,
+  * report per-edge step time, schedule-derived speed-up vs single device,
+    and the per-device memory-module bytes (the paper's GPU-memory column:
+    node-memory rows x dim x 4B — the quantity that OOMs single devices).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import hdrf_partition, sep_partition
+from repro.tig.data import synthetic_tig
+from repro.tig.distributed import pac_train
+from repro.tig.graph import chronological_split
+from repro.tig.models import TIGConfig
+from repro.tig.train import train_single
+
+
+def run(fast: bool = True, dataset: str = "small", flavors=("tgn",)):
+    g = synthetic_tig(dataset, seed=0)
+    train_g, _, _, _ = chronological_split(g)
+    n_dev = 4
+    cfg = TIGConfig(flavor="tgn", dim=32, dim_time=16, dim_edge=g.dim_edge,
+                    dim_node=g.dim_node, num_neighbors=5, batch_size=100)
+    epochs = 1 if fast else 3
+    rows = []
+    mem_bytes_per_node = (2 * cfg.dim + 1) * 4  # mem + mem2 + last, f32
+
+    def pac_row(label, part):
+        t0 = time.perf_counter()
+        res = pac_train(train_g, part, cfg, num_devices=n_dev,
+                        epochs=epochs, shuffle_parts=False)
+        wall = (time.perf_counter() - t0) / epochs
+        cap = res.plan.capacity
+        rows.append({
+            "setting": label,
+            "epoch_seconds(simulated_1core)": wall,
+            "derived_speedup": res.derived_speedup,
+            "edges_per_device_max": int(res.edges_per_device.max()),
+            "mem_module_bytes_per_device": cap * mem_bytes_per_node,
+            "loss": float(res.mean_loss_per_epoch()[-1]),
+        })
+
+    for k_pct in (0, 1, 5, 10):
+        part = sep_partition(train_g.src, train_g.dst, train_g.t,
+                             g.num_nodes, n_dev, k=k_pct / 100.0)
+        pac_row(f"sep_topk={k_pct}%", part)
+
+    hd = hdrf_partition(train_g.src, train_g.dst, g.num_nodes, n_dev)
+    pac_row("hdrf", hd)
+
+    # single-device baseline (the paper's Single-GPU / CPU row)
+    t0 = time.perf_counter()
+    res1 = train_single(g, cfg, epochs=epochs)
+    wall1 = (time.perf_counter() - t0) / epochs
+    rows.append({
+        "setting": "single-device",
+        "epoch_seconds(simulated_1core)": wall1,
+        "derived_speedup": 1.0,
+        "edges_per_device_max": train_g.num_edges,
+        "mem_module_bytes_per_device": g.num_nodes * mem_bytes_per_node,
+        "loss": res1.losses[-1],
+    })
+    emit("table3_efficiency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=False)

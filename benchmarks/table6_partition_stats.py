@@ -1,0 +1,53 @@
+"""Paper Tab.VI — edge-cut %, edge/node balance, per algorithm.
+
+SEP across top_k + HDRF + Random + LDG + KL on the largest synthetic
+dataset the container comfortably holds."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    hdrf_partition,
+    kl_partition,
+    ldg_partition,
+    partition_stats,
+    random_partition,
+    sep_partition,
+)
+from repro.tig.data import synthetic_tig
+
+
+def run(fast: bool = True, dataset: str | None = None):
+    dataset = dataset or ("small" if fast else "taobao-s")
+    scale = 1.0 if fast else 0.1      # taobao-s at 10% = 200k edges
+    g = synthetic_tig(dataset, seed=0, scale=scale)
+    rows = []
+
+    def add(res):
+        s = partition_stats(res)
+        rows.append({
+            "algorithm": s.algorithm,
+            "total_cut%": 100 * s.edge_cut,
+            "edge_std": s.edge_std,
+            "avg_node_portion%": 100 * s.avg_node_portion,
+            "node_std": s.node_std,
+            "replication_factor": s.replication_factor,
+            "shared_nodes": s.num_shared,
+            "partition_time_s": s.elapsed_s,
+        })
+
+    for k in (0.0, 0.01, 0.05, 0.10):
+        add(sep_partition(g.src, g.dst, g.t, g.num_nodes, 4, k=k))
+    add(hdrf_partition(g.src, g.dst, g.num_nodes, 4))
+    add(random_partition(g.src, g.dst, g.num_nodes, 4))
+    add(ldg_partition(g.src, g.dst, g.num_nodes, 4))
+    if g.num_edges <= 300_000:    # KL is O(V^2)-ish; cap its input
+        add(kl_partition(g.src, g.dst, g.num_nodes, 4))
+    emit("table6_partition_stats", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,40 @@
+"""Paper Tab.VIII — partitioning wall time: SEP vs KL across dataset sizes.
+
+The paper reports 41x..94.6x SEP speed-up growing with graph size; same
+trend here (CPU, synthetic shape-mirrors)."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import kl_partition, sep_partition
+from repro.tig.data import synthetic_tig
+
+
+def run(fast: bool = True):
+    datasets = [("tiny", 1.0), ("small", 1.0), ("wikipedia-s", 1.0)] \
+        if fast else [("small", 1.0), ("wikipedia-s", 1.0),
+                      ("mooc-s", 1.0), ("dgraphfin-s", 0.25)]
+    rows = []
+    for name, scale in datasets:
+        g = synthetic_tig(name, seed=0, scale=scale)
+        sep = sep_partition(g.src, g.dst, g.t, g.num_nodes, 4, k=0.05)
+        t_kl = None
+        if g.num_edges <= 120_000:
+            kl = kl_partition(g.src, g.dst, g.num_nodes, 4)
+            t_kl = kl.elapsed_s
+        rows.append({
+            "dataset": name,
+            "edges": g.num_edges,
+            "nodes": g.num_nodes,
+            "sep_seconds": sep.elapsed_s,
+            "kl_seconds": t_kl if t_kl is not None else float("nan"),
+            "speedup": (t_kl / sep.elapsed_s) if t_kl else float("nan"),
+        })
+    emit("table8_partition_time", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,53 @@
+"""LM pretraining example: train a reduced assigned-architecture config for
+a few hundred steps on the synthetic corpus (CPU; the full configs are
+exercised via the dry-run on the production mesh).
+
+    PYTHONPATH=src python examples/lm_pretrain.py --arch olmoe-1b-7b \
+        --steps 300 --batch 8 --seq 128
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.data import LMDataConfig, packed_batches
+from repro.models import init_params, make_train_step
+from repro.optim import adamw, linear_warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b",
+                    choices=[a for a in list_archs() if a != "speed-tig"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    dcfg = LMDataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                        global_batch=args.batch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"{args.arch} (reduced): "
+          f"{sum(x.size for x in jax.tree.leaves(params))/1e6:.2f}M params")
+    opt = adamw(lr=linear_warmup_cosine(args.lr, 20, args.steps),
+                weight_decay=0.1, max_grad_norm=1.0)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    data = packed_batches(dcfg)
+    t0, seen = time.perf_counter(), 0
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        seen += args.batch * args.seq
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"tok/s {seen/(time.perf_counter()-t0):,.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the SPEED pipeline in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Generates a small temporal interaction graph, partitions its training
+stream with SEP (Alg.1), trains a TGN backbone with PAC on 4 simulated
+devices (Alg.2: lockstep wrap-around, memory backup/restore, shared-node
+sync), and evaluates link prediction.
+"""
+
+import numpy as np
+
+from repro.core import partition_stats, sep_partition
+from repro.tig.data import synthetic_tig
+from repro.tig.distributed import pac_train
+from repro.tig.graph import chronological_split
+from repro.tig.models import TIGConfig
+from repro.tig.train import evaluate_params
+
+
+def main():
+    # 1) a temporal interaction graph (users x items, power-law, bursty)
+    g = synthetic_tig("small", seed=0)
+    print("graph:", g.stats())
+    train_g, val_g, test_g, _ = chronological_split(g)
+
+    # 2) SEP: stream the training edges into 8 balanced vertex-cut parts,
+    #    replicating only the top-5% time-decay-centrality hubs
+    part = sep_partition(train_g.src, train_g.dst, train_g.t,
+                         g.num_nodes, num_parts=8, k=0.05)
+    print("partition:", partition_stats(part))
+
+    # 3) PAC: shuffle-combine 8 parts -> 4 devices, train 3 epochs
+    cfg = TIGConfig(flavor="tgn", dim=32, dim_time=16, dim_edge=g.dim_edge,
+                    dim_node=g.dim_node, num_neighbors=5, batch_size=100)
+    res = pac_train(train_g, part, cfg, num_devices=4, epochs=3, lr=2e-3)
+    print(f"losses/epoch: {res.mean_loss_per_epoch().round(4).tolist()}  "
+          f"derived speedup: {res.derived_speedup:.2f}x")
+
+    # 4) downstream: link prediction AP
+    ev = evaluate_params(g, cfg, res.params)
+    print(f"test AP {ev['test_ap']:.3f} "
+          f"(inductive {ev['test_ap_inductive']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Batched serving example: prefill a batch of prompts, then decode tokens
+with the KV/recurrent-state cache (greedy), for any assigned architecture.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.models import init_cache, init_params, serve_step
+from repro.models.model import fill_enc_cache
+from repro.models.sampling import sample_tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b",
+                    choices=[a for a in list_archs() if a != "speed-tig"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples (with --top-k/--top-p)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b = args.batch
+    total = args.prompt_len + args.gen
+    cache = init_cache(cfg, 1, b, total, enc_len=16)
+    if cfg.enc_dec:
+        frames = jnp.asarray(rng.normal(size=(b, 16, cfg.d_model)),
+                             jnp.float32)
+        cache = fill_enc_cache(params, cache, frames, cfg)
+
+    step = jax.jit(lambda p, c, bt: serve_step(p, c, bt, cfg))
+    prompts = rng.integers(0, cfg.vocab, (b, args.prompt_len))
+
+    # prefill: feed prompt tokens through the decode path (cache fills up)
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache,
+                             {"token": jnp.asarray(prompts[:, t]),
+                              "pos": jnp.full((b,), t, jnp.int32)})
+    prefill_s = time.perf_counter() - t0
+
+    # decode (greedy or sampled)
+    sample_key = jax.random.PRNGKey(1)
+
+    def pick(key, lg):
+        return sample_tokens(key, lg[:, :cfg.vocab],
+                             temperature=args.temperature,
+                             top_k=args.top_k, top_p=args.top_p)
+
+    out_tokens = []
+    tok = pick(sample_key, logits)
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        out_tokens.append(np.asarray(tok))
+        logits, cache = step(
+            params, cache,
+            {"token": tok,
+             "pos": jnp.full((b,), args.prompt_len + i, jnp.int32)})
+        sample_key, sub = jax.random.split(sample_key)
+        tok = pick(sub, logits)
+    decode_s = time.perf_counter() - t0
+
+    gen = np.stack(out_tokens, axis=1)
+    print(f"{args.arch}: prefill {args.prompt_len} toks x{b} in "
+          f"{prefill_s:.2f}s; decoded {args.gen} toks x{b} in {decode_s:.2f}s"
+          f" ({b*args.gen/decode_s:.1f} tok/s)")
+    print("first sequence:", gen[0][:16].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

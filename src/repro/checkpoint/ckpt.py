@@ -1,0 +1,86 @@
+"""Pytree checkpointing (npz-based; no orbax offline).
+
+Flattens any pytree of arrays into a single ``.npz`` with path-encoded keys,
+plus a tiny JSON manifest (step, metadata).  Sharded arrays are gathered to
+host before saving (fine at the scales this container trains); restore
+re-places values onto the target shardings when given.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_SEP = "|"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    flat = _flatten(tree)
+    np.savez_compressed(path, **flat)
+    manifest = {"step": step, "num_arrays": len(flat),
+                "metadata": metadata or {}}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1))
+             for fn in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", fn))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target_tree,
+                       shardings=None):
+    """Restore into the structure of ``target_tree`` (shape/dtype checked).
+
+    ``shardings``: optional matching pytree of jax.sharding.Sharding to
+    device_put the restored leaves onto."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    leaves = []
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    for (path_elems, leaf), shard in zip(paths, shard_leaves):
+        key = _SEP.join(_path_str(p) for p in path_elems)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"target {np.shape(leaf)}")
+        if shard is not None:
+            arr = jax.device_put(arr, shard)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,13 @@
+"""Architecture configs: the 10 assigned architectures + the paper's own
+TIG workload.  See base.py for the registry."""
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    ArchConfig,
+    InputShape,
+    get_config,
+    list_archs,
+)
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "get_config",
+           "list_archs"]

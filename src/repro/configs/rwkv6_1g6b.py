@@ -1,0 +1,43 @@
+"""RWKV6 "Finch" 1.6B — attention-free, data-dependent decay
+[arXiv:2404.05892].
+
+Assigned spec: 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536.
+Head structure: d_model / 64 = 32 WKV heads of dim 64 (the published layout).
+Supports long_500k (recurrent state is O(1) in sequence length).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    citation="arXiv:2404.05892",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,          # WKV heads = d_model / rwkv_head_dim
+    n_kv_heads=32,
+    d_ff=7168,
+    vocab=65_536,
+    rwkv=True,
+    rwkv_head_dim=64,
+    rope="none",
+    act="relu_sq",       # RWKV channel-mix uses squared ReLU
+)
+
+REDUCED = ArchConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    citation="arXiv:2404.05892",
+    n_layers=2,
+    d_model=128,
+    n_heads=2,
+    n_kv_heads=2,
+    d_ff=448,
+    vocab=512,
+    rwkv=True,
+    rwkv_head_dim=64,
+    rope="none",
+    act="relu_sq",
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,52 @@
+"""The paper's own workload as a selectable config: a TGN-family TIG model
+trained with SEP partitions + PAC (see repro.tig / repro.core).
+
+This is not a transformer ArchConfig — it is registered for launcher
+completeness (``--arch speed-tig`` routes to the TIG trainer) and is the
+"most representative of the paper's technique" §Perf hillclimb target.
+The ArchConfig fields describe the TIG model's dense modules so the dry-run
+machinery can size it.
+"""
+
+from repro.configs.base import ArchConfig, register
+from repro.tig.models import TIGConfig
+
+TIG = TIGConfig(
+    flavor="tgn",
+    dim=172,             # paper's feature dim on the small datasets
+    dim_time=100,
+    dim_edge=172,
+    dim_node=172,
+    num_neighbors=10,
+    batch_size=200,      # paper §III-A small-dataset batch size
+)
+
+FULL = ArchConfig(
+    name="speed-tig",
+    family="tig",
+    citation="this paper (SPEED)",
+    n_layers=1,
+    d_model=172,
+    n_heads=2,
+    n_kv_heads=2,
+    d_ff=344,
+    vocab=0,
+    rope="none",
+    act="gelu",
+)
+
+REDUCED = ArchConfig(
+    name="speed-tig",
+    family="tig",
+    citation="this paper (SPEED)",
+    n_layers=1,
+    d_model=32,
+    n_heads=2,
+    n_kv_heads=2,
+    d_ff=64,
+    vocab=0,
+    rope="none",
+    act="gelu",
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,66 @@
+"""SPEED core: streaming edge partitioning (SEP) + parallel acceleration (PAC).
+
+The paper's primary contribution, as host-side algorithms:
+  * ``repro.core.centrality`` — temporal time-decay centrality (Eq.1-2).
+  * ``repro.core.sep``        — Alg.1 streaming vertex-cut partitioner.
+  * ``repro.core.baselines``  — HDRF / Greedy / Random / LDG / KL.
+  * ``repro.core.metrics``    — RF / EC / balance + Thm.1-2 bounds.
+  * ``repro.core.pac``        — shuffle-combine, Alg.2 cycle schedule,
+                                shared-node memory sync (reference impl).
+
+The accelerator half of PAC (shard_map training) is ``repro.tig.distributed``.
+"""
+
+from repro.core.baselines import (
+    greedy_partition,
+    hdrf_partition,
+    kl_partition,
+    ldg_partition,
+    random_partition,
+)
+from repro.core.centrality import (
+    degree_centrality,
+    temporal_centrality,
+    top_k_hubs,
+)
+from repro.core.metrics import (
+    edge_cut_fraction,
+    partition_stats,
+    replication_factor,
+    thm1_rf_bound,
+    thm2_ec_bound,
+)
+from repro.core.pac import (
+    build_subgraph,
+    cycle_schedule,
+    derived_speedup,
+    make_local_indices,
+    shuffle_combine,
+    sync_shared_memory,
+)
+from repro.core.sep import PartitionResult, sep_partition, streaming_vertex_cut
+
+__all__ = [
+    "PartitionResult",
+    "sep_partition",
+    "streaming_vertex_cut",
+    "hdrf_partition",
+    "greedy_partition",
+    "random_partition",
+    "ldg_partition",
+    "kl_partition",
+    "temporal_centrality",
+    "degree_centrality",
+    "top_k_hubs",
+    "replication_factor",
+    "edge_cut_fraction",
+    "partition_stats",
+    "thm1_rf_bound",
+    "thm2_ec_bound",
+    "shuffle_combine",
+    "build_subgraph",
+    "make_local_indices",
+    "cycle_schedule",
+    "sync_shared_memory",
+    "derived_speedup",
+]

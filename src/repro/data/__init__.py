@@ -1,0 +1,3 @@
+from repro.data.pipeline import LMDataConfig, packed_batches, synthetic_corpus
+
+__all__ = ["LMDataConfig", "packed_batches", "synthetic_corpus"]

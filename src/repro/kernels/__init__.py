@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+    kernel            used by                         file
+    fused GRU         TIG memory update (UPD)         fused_gru.py
+    temporal attn     TIG embedding module            temporal_attn.py
+    flash attention   LLM train/prefill (+SWA)        flash_attention.py
+    RWKV6 WKV         rwkv6-1.6b / linear attention   rwkv6_scan.py
+
+``ops.py`` is the dispatching entry point (pallas / interpret / xla);
+``ref.py`` holds the pure-jnp oracles the tests validate against.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

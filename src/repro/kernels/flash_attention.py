@@ -1,0 +1,132 @@
+"""Blockwise (flash) causal attention — Pallas TPU kernel.
+
+Online-softmax attention with O(S) memory: grid (B*H, num_q_blocks,
+num_k_blocks), with running max / denominator / accumulator carried in VMEM
+scratch across the k-block axis (TPU executes the grid sequentially along the
+trailing axis, so scratch is a legal carry).  Supports causal masking and a
+sliding window (``window`` tokens lookback, inclusive of self) — the
+starcoder2 / hymba long-context path.
+
+Blocks are 128-aligned for the MXU; out-of-range k blocks are skipped with
+``pl.when`` (predication, no wasted matmuls) — with a sliding window this is
+what makes attention cost O(S * window) instead of O(S^2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale, causal, window, block_q, block_k, num_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    run = jnp.bool_(True)
+    if causal:
+        # need k_start <= last query index of this block
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        # need block's last key index >= first allowed index of the block's
+        # first query: q_start - window + 1
+        run = jnp.logical_and(
+            run, k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= k_idx <= q_idx
+        if window is not None:
+            mask &= k_idx > q_idx - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q, k, v: (B, H, S, D) -> (B, H, S, D).  D and S should be multiples of
+    128 on real TPUs (the wrapper in ops.py pads); any shape works in
+    interpret mode."""
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    num_q = pl.cdiv(s, block_q)
+    num_k = pl.cdiv(s, block_k)
+    qr = q.reshape(b * h, s, d)
+    kr = k.reshape(b * h, s, d)
+    vr = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_k=num_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, num_q, num_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,80 @@
+"""Public kernel entry points with backend dispatch.
+
+Each op picks its execution path:
+  * ``backend="pallas"``     — pl.pallas_call targeting real TPUs,
+  * ``backend="interpret"``  — the same kernel body executed in Python on
+                               CPU (correctness validation; what tests use),
+  * ``backend="xla"``        — the pure-jnp oracle from ``ref.py`` (what the
+                               models use on CPU and in dry-runs; on TPU
+                               deployments flip the default to "pallas").
+
+``default_backend()`` resolves "auto": pallas on TPU, xla elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _fa_pallas
+from repro.kernels.fused_gru import fused_gru as _gru_pallas
+from repro.kernels.rwkv6_scan import rwkv6_chunked as _wkv_pallas
+from repro.kernels.temporal_attn import temporal_attn as _tattn_pallas
+
+__all__ = ["default_backend", "gru", "temporal_attention",
+           "flash_attention", "rwkv6"]
+
+
+@functools.cache
+def default_backend() -> str:
+    try:
+        platform = jax.devices()[0].platform
+    except RuntimeError:
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "xla"
+
+
+def _resolve(backend: str | None) -> str:
+    return backend if backend not in (None, "auto") else default_backend()
+
+
+def gru(x, h, wx, wh, bx, bh, *, backend: str | None = None):
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.gru_ref(x, h, wx, wh, bx, bh)
+    return _gru_pallas(x, h, wx, wh, bx, bh, interpret=(b == "interpret"))
+
+
+def temporal_attention(q, k, v, mask, *, backend: str | None = None):
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.temporal_attention_ref(q, k, v, mask)
+    return _tattn_pallas(q, k, v, mask, interpret=(b == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    backend: str | None = None, block_q=128, block_k=128):
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _fa_pallas(q, k, v, causal=causal, window=window,
+                      block_q=block_q, block_k=block_k,
+                      interpret=(b == "interpret"))
+
+
+def rwkv6(r, k, v, w, u, *, state=None, chunk=64,
+          backend: str | None = None, return_state=True):
+    b = _resolve(backend)
+    if b == "xla":
+        # chunked XLA path (falls back to the token scan for short/ragged
+        # sequences) — §Perf iteration B1: ~chunk-fold fewer state carries.
+        o, s = ref.rwkv6_chunked_xla(r, k, v, w, u, state=state,
+                                     chunk=chunk, return_state=True)
+    elif b == "scan":
+        o, s = ref.rwkv6_ref(r, k, v, w, u, state=state, return_state=True)
+    else:
+        o, s = _wkv_pallas(r, k, v, w, u, state=state, chunk=chunk,
+                           interpret=(b == "interpret"))
+    return (o, s) if return_state else o

@@ -1,0 +1,143 @@
+"""Chunked RWKV6 (Finch) WKV recurrence — Pallas TPU kernel.
+
+The WKV recurrence (per head, per batch)
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T        w_t in (0,1), data-dependent
+
+is sequential per token — useless for the MXU if evaluated naively.  The
+chunked reformulation (chunk C tokens, log-space cumulative decays
+c_t = sum_{s<=t} log w_s within the chunk):
+
+    inter-chunk:  o_t += (r_t ⊙ exp(c_{t-1}))^T  S_0
+    intra-chunk:  o_t += sum_{j<t} [(r_t ⊙ exp(c_{t-1} - z)) · (k_j ⊙
+                         exp(z - c_j))] v_j           (one (C,C) matmul!)
+    bonus:        o_t += ((r_t ⊙ u) · k_t) v_t
+    state:        S_C  = diag(exp(c_C)) S_0 + (k ⊙ exp(c_C - c))^T V
+
+where z is any per-channel shift (we use c_C / 2 to center the exponents —
+keeps everything within fp32 range for |log w|·C ≲ 80).  This turns the
+recurrence into three MXU matmuls per chunk plus one rank-C state update.
+
+Grid: (B*H, S/C) — the trailing chunk axis executes sequentially on TPU, so
+the running state lives in VMEM scratch and is carried across chunks; the
+final state is emitted for decode-time continuation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rwkv6_chunked"]
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, logw_ref, u_ref, s0_ref,
+                o_ref, sout_ref, state, *, chunk, num_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)       # (C, Dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)       # (C, Dv)
+    lw = logw_ref[0].astype(jnp.float32)   # (C, Dk) log-decay (negative)
+    u = u_ref[0].astype(jnp.float32)       # (1, Dk) bonus
+
+    c = jnp.cumsum(lw, axis=0)             # (C, Dk) inclusive cumulative
+    c_prev = c - lw                        # exclusive: c_{t-1}
+    c_tot = c[-1]                          # (Dk,)
+    z = 0.5 * c_tot                        # exponent-centering shift
+
+    r_dec = r * jnp.exp(c_prev - z)        # (C, Dk)
+    k_dec = k * jnp.exp(z - c)             # (C, Dk)
+
+    s0 = state[...]                        # (Dk, Dv)
+
+    # inter-chunk: queries see the carried state
+    o = jax.lax.dot_general(
+        r * jnp.exp(c_prev), s0, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (C, Dv)
+
+    # intra-chunk: strictly-lower-triangular token mixing
+    scores = jax.lax.dot_general(
+        r_dec, k_dec, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(tj < ti, scores, 0.0)
+    o = o + jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # current-token bonus
+    o = o + jnp.sum(r * u * k, axis=-1, keepdims=True) * v
+
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    # state update: S_C = diag(exp(c_tot)) S_0 + (k ⊙ exp(c_tot - c))^T V
+    k_carry = k * jnp.exp(c_tot[None, :] - c)            # (C, Dk)
+    state[...] = jnp.exp(c_tot)[:, None] * s0 + jax.lax.dot_general(
+        k_carry, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        sout_ref[0] = state[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def rwkv6_chunked(r, k, v, w, u, *, state=None, chunk: int = 64,
+                  interpret: bool = False):
+    """Chunked WKV6.  r,k,w: (B,H,S,Dk); v: (B,H,S,Dv); u: (H,Dk);
+    optional state (B,H,Dk,Dv).  Returns (o, final_state).
+
+    S must be a multiple of ``chunk`` (pad upstream)."""
+    b, h, s, dk = r.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    num_chunks = s // chunk
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    bh = b * h
+    rr = r.reshape(bh, s, dk)
+    kk = k.reshape(bh, s, dk)
+    vv = v.reshape(bh, s, dv)
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-38, 1.0)
+                 ).reshape(bh, s, dk)
+    uu = jnp.broadcast_to(u[None], (b, h, dk)).reshape(bh, 1, dk)
+    s0 = state.reshape(bh, dk, dv)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk,
+                               num_chunks=num_chunks)
+    o, s_out = pl.pallas_call(
+        kernel,
+        grid=(bh, num_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, 1, dk), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i, c: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dv), r.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, lw, uu, s0)
+    return o.reshape(b, h, s, dv), s_out.reshape(b, h, dk, dv)

@@ -1,0 +1,29 @@
+"""Production mesh construction (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any device query).
+
+Hardware constants for the roofline (v5e): see ``repro.roofline.analysis``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_tig_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """single pod: (16, 16) ("data", "model") = 256 chips;
+    multi-pod:  (2, 16, 16) ("pod", "data", "model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_tig_mesh(num_parts: int):
+    """PAC mesh: one axis, one sub-graph partition per device (paper §II-C).
+
+    On the production pod a TIG deployment uses all chips of one pod as
+    partitions (the memory module shards |V|/256 per chip)."""
+    return jax.make_mesh((num_parts,), ("part",))

@@ -1,0 +1,26 @@
+"""LLM pillar: the 10 assigned architectures as one composable model zoo.
+
+  * ``layers``      — norms, RoPE/M-RoPE, chunked attention, FFN, conv.
+  * ``moe``         — sort-based top-k expert routing (expert parallel).
+  * ``ssm``         — mamba-style selective SSM (hymba hybrid heads).
+  * ``rwkv``        — RWKV6 time-mix / channel-mix blocks.
+  * ``transformer`` — per-family blocks + TP padding rules.
+  * ``model``       — init/forward/loss/train_step/serve_step + shardings.
+"""
+
+from repro.models.model import (
+    batch_specs,
+    cache_specs,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    make_train_step,
+    param_specs,
+    serve_step,
+)
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "make_train_step",
+    "init_cache", "serve_step", "param_specs", "batch_specs", "cache_specs",
+]

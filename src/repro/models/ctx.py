@@ -1,0 +1,36 @@
+"""Tracing-time context for distribution decisions.
+
+The launcher / dry-run sets these before tracing; model code reads them.
+Kept in a leaf module so layers/transformer/model can all import it without
+cycles.
+  * ACT_BATCH_AXES — mesh axes the activation batch dim is sharded over
+    (e.g. ("data",) or ("pod", "data")); None = no constraints (single
+    device).
+  * SHARDED_MOE — route MoE layers through the shard_map expert-parallel
+    dispatch (§Perf A1) instead of the plain pjit path.
+"""
+
+from __future__ import annotations
+
+ACT_BATCH_AXES = None
+SHARDED_MOE = False
+
+
+class activation_batch_axes:
+    """Context manager pinning activation sharding (and optionally the
+    shard_map MoE path) during tracing."""
+
+    def __init__(self, axes, sharded_moe: bool = False):
+        self.axes = axes
+        self.sharded_moe = sharded_moe
+
+    def __enter__(self):
+        global ACT_BATCH_AXES, SHARDED_MOE
+        self._prev = (ACT_BATCH_AXES, SHARDED_MOE)
+        ACT_BATCH_AXES = self.axes
+        SHARDED_MOE = self.sharded_moe
+        return self
+
+    def __exit__(self, *exc):
+        global ACT_BATCH_AXES, SHARDED_MOE
+        ACT_BATCH_AXES, SHARDED_MOE = self._prev

@@ -1,0 +1,274 @@
+"""Transformer building blocks (raw JAX, functional params, TP-friendly).
+
+Conventions:
+  * params are stored float32; compute casts to ``cfg.dtype`` (bf16 default);
+  * activations are (B, S, ...); attention heads (B, S, H, Dh);
+  * every matmul keeps its contraction dims MXU-aligned where the published
+    architecture allows; head counts are padded to the mesh's "model" axis by
+    the model builder (padding overhead is surfaced in the roofline's
+    MODEL_FLOPS / HLO_FLOPs ratio);
+  * attention is *chunked* over query blocks (online softmax not needed —
+    full-row softmax per chunk) so the (S, S) score tensor never
+    materializes; sliding-window attention slices keys to the window, making
+    cost O(S * window).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "linear_init", "linear",
+    "rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm",
+    "rope_freqs", "apply_rope", "apply_mrope",
+    "ffn_init", "ffn_apply",
+    "chunked_attention", "decode_attention",
+    "sinusoidal_positions", "causal_conv1d",
+]
+
+
+# ------------------------------------------------------------------ basics
+
+def linear_init(key, d_in: int, d_out: int, *, scale: Optional[float] = None
+                ) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"].astype(x.dtype)
+
+
+def rmsnorm_init(d: int) -> dict:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+def layernorm_init(d: int) -> dict:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)) * p["g"] + p["b"]
+            ).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (head_dim/2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def _rotate(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., H, Dh) with angles (..., Dh/2) broadcast over H."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, inv_freq: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) int."""
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (B,S,Dh/2)
+    return _rotate(x, angles)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                inv_freq: jnp.ndarray, sections: tuple[int, ...]
+                ) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): rotary frequency ladder split into
+    per-axis sections (t, h, w); each section rotates by its own position
+    stream.  x: (B, S, H, Dh); positions3: (B, 3, S)."""
+    assert sum(sections) == inv_freq.shape[0], (sections, inv_freq.shape)
+    angle_parts = []
+    off = 0
+    for axis, sec in enumerate(sections):
+        f = inv_freq[off: off + sec]
+        p = positions3[:, axis, :, None].astype(jnp.float32)   # (B,S,1)
+        angle_parts.append(p * f)
+        off += sec
+    angles = jnp.concatenate(angle_parts, axis=-1)             # (B,S,Dh/2)
+    return _rotate(x, angles)
+
+
+def sinusoidal_positions(s: int, d: int, offset: int = 0) -> jnp.ndarray:
+    """Classic sin/cos table (seamless uses non-rotary positions)."""
+    pos = jnp.arange(offset, offset + s, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------- FFN
+
+def ffn_init(key, d: int, d_ff: int, act: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi": linear_init(k1, d, d_ff),
+            "wg": linear_init(k2, d, d_ff),
+            "wo": linear_init(k3, d_ff, d, scale=d_ff ** -0.5),
+        }
+    return {
+        "wi": linear_init(k1, d, d_ff),
+        "wo": linear_init(k3, d_ff, d, scale=d_ff ** -0.5),
+    }
+
+
+def _act(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name in ("geglu", "gelu"):
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu_sq":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def ffn_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = _act(act, linear(p["wi"], x))
+    if "wg" in p:                      # gated variants
+        h = h * linear(p["wg"], x)
+    return linear(p["wo"], h)
+
+
+# -------------------------------------------------------------- attention
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, H, Dh); k: (B, Sk, Hkv, Dh) -> (B, Hkv, G, Sq, Sk).
+
+    Heads use a KV-MAJOR layout (head h = kv_idx * G + g_idx): the reshape
+    (H,) -> (Hkv, G) then splits the model-sharded head axis on its FIRST
+    factor, which GSPMD can shard; (G, Hkv) order would force replication.
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k)
+
+
+def _gqa_out(att, v):
+    """att: (B, Hkv, G, Sq, Sk); v: (B, Sk, Hkv, Dh) -> (B, Sq, H, Dh)."""
+    b, hkv, g, sq, sk = att.shape
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", att, v)
+    return out.reshape(b, sq, hkv * g, v.shape[-1])
+
+
+def chunked_attention(
+    q: jnp.ndarray,            # (B, S, H, Dh)
+    k: jnp.ndarray,            # (B, S, Hkv, Dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    mask: Optional[jnp.ndarray] = None,   # (B, Sk) key validity
+) -> jnp.ndarray:
+    """Query-chunked attention: scores materialize as (B, G, Hkv, chunk, Sk)
+    only.  With a sliding ``window`` the key extent per chunk is sliced to
+    window + chunk (static size) — cost O(S * (window + chunk)).
+    """
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    sk = k.shape[1]
+
+    def one_chunk(ci):
+        q_start = ci * chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, q_start, chunk, axis=1)
+        q_idx = q_start + jnp.arange(chunk)
+        if window is not None:
+            # keys the whole chunk can see: [q_start - window + 1,
+            #                                q_start + chunk)
+            span = window + chunk
+            k_off = jnp.clip(q_start - window + 1, 0, max(sk - span, 0))
+            kc = jax.lax.dynamic_slice_in_dim(k, k_off, min(span, sk), 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k_off, min(span, sk), 1)
+            k_idx = k_off + jnp.arange(min(span, sk))
+            mc = None if mask is None else jax.lax.dynamic_slice_in_dim(
+                mask, k_off, min(span, sk), 1)
+        else:
+            kc, vc, k_idx = k, v, jnp.arange(sk)
+            mc = mask
+        scores = _gqa_scores(qc, kc) * scale          # (B,G,Hkv,chunk,Sk')
+        m = jnp.ones((chunk, k_idx.shape[0]), bool)
+        if causal:
+            m &= k_idx[None, :] <= q_idx[:, None]
+        if window is not None:
+            m &= k_idx[None, :] > q_idx[:, None] - window
+        big_neg = jnp.asarray(-1e30, scores.dtype)
+        scores = jnp.where(m[None, None, None], scores, big_neg)
+        if mc is not None:
+            scores = jnp.where(mc[:, None, None, None, :], scores, big_neg)
+        att = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                             ).astype(q.dtype)
+        return _gqa_out(att, vc)                      # (B, chunk, H, Dh)
+
+    if n_chunks == 1:
+        return one_chunk(0)
+    # checkpoint each q-chunk: backward recomputes its (chunk, Sk)
+    # attention probabilities instead of keeping all n_chunks of them
+    # stacked in f32 (flash-attention's recompute trick at chunk
+    # granularity — §Perf dense-train iteration).
+    outs = jax.lax.map(jax.checkpoint(one_chunk), jnp.arange(n_chunks))
+    # (n_chunks, B, chunk, H, Dh) -> (B, S, H, Dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dh)
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (B, H, Dh) — one new token per sequence
+    k_cache: jnp.ndarray,      # (B, S, Hkv, Dh)
+    v_cache: jnp.ndarray,
+    valid: jnp.ndarray,        # (B, S) bool — which cache slots are live
+) -> jnp.ndarray:
+    """Single-token attention against a KV cache (masked, GQA, kv-major)."""
+    b, h, dh = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache) * (dh ** -0.5)
+    big_neg = jnp.asarray(-1e30, scores.dtype)
+    scores = jnp.where(valid[:, None, None, :], scores, big_neg)
+    att = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", att, v_cache)
+    return out.reshape(b, h, dh)
+
+
+# ------------------------------------------------------------------ conv1d
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv (mamba's local mixing).
+
+    x: (B, S, D); w: (D, K); b: (D,).  Returns (y, new_state) where state is
+    the last K-1 inputs ((B, K-1, D)) for streaming decode.
+    """
+    bsz, s, d = x.shape
+    kk = w.shape[1]
+    if state is None:
+        state = jnp.zeros((bsz, kk - 1, d), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, D)
+    idx = jnp.arange(s)[:, None] + jnp.arange(kk)[None, :]
+    windows = xp[:, idx, :]                           # (B, S, K, D)
+    y = jnp.einsum("bskd,dk->bsd", windows, w.astype(x.dtype)) \
+        + b.astype(x.dtype)
+    new_state = xp[:, -(kk - 1):, :] if kk > 1 else state
+    return y, new_state

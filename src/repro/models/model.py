@@ -1,0 +1,464 @@
+"""Public LM API: init / forward / loss / train_step / serve_step.
+
+Layer parameters are STACKED over the layer axis and applied with
+``jax.lax.scan`` (+ optional remat) so 512-device programs stay compilable.
+Sharding rules live in ``param_specs`` / ``batch_specs`` (pjit; the mesh
+axes are ("data", "model") or ("pod", "data", "model")).
+
+Batch layouts (also produced by ``repro.launch.dryrun.input_specs``):
+  train/prefill:
+    dense/moe/ssm/hybrid: {"tokens": (B,S), "targets": (B,S)}
+    vlm:   + {"patches": (B,F,d), "positions3": (B,3,S)}   (stub frontend)
+    audio: {"frames": (B,S,d), "tokens": (B,S), "targets": (B,S)}
+  decode (serve_step):
+    {"token": (B,), "pos": (B,)} + cache pytree (stacked over layers)
+    audio adds {"enc_out": (B,S_enc,d)} fixed encoder memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (
+    linear,
+    linear_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_positions,
+)
+from repro.models.transformer import (
+    PadDims,
+    attn_apply,
+    block_apply,
+    block_decode,
+    block_init,
+    init_block_cache,
+    pad_dims,
+)
+from repro.optim import Optimizer
+
+__all__ = ["init_params", "forward", "loss_fn", "make_train_step",
+           "init_cache", "serve_step", "param_specs", "batch_specs",
+           "cache_specs", "pad_dims", "activation_batch_axes"]
+
+
+# Activation-sharding convention for pjit runs (see repro.models.ctx):
+# forward() pins activations to P(axes, None, ...) after gathers/reshapes
+# whose inferred sharding XLA otherwise gets wrong (the embedding gather is
+# the notorious one: without the constraint XLA replicates activations
+# across "data" and involuntarily rematerializes).
+from repro.models.ctx import activation_batch_axes  # re-export  # noqa
+from repro.models import ctx as _ctx
+
+
+def _pin_batch(x, *, extra=()):
+    """with_sharding_constraint(P(batch_axes, None...)) when configured."""
+    if _ctx.ACT_BATCH_AXES is None:
+        return x
+    spec = P(_ctx.ACT_BATCH_AXES,
+             *([None] * (x.ndim - 1 - len(extra))), *extra)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ======================================================================
+# init
+# ======================================================================
+
+def init_params(key, cfg: ArchConfig, tp: int = 1) -> dict:
+    pd = pad_dims(cfg, tp)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (pd.vocab, d), jnp.float32)
+        * (d ** -0.5),
+        "final_norm": rmsnorm_init(d),
+    }
+
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    params["layers"] = jax.vmap(
+        lambda k: block_init(k, cfg, pd, cross=cfg.enc_dec)
+    )(layer_keys)
+
+    if cfg.enc_dec:
+        enc_keys = jax.random.split(ks[2], cfg.n_enc_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: block_init(k, cfg, pd)
+        )(enc_keys)
+        params["enc_norm"] = rmsnorm_init(d)
+
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(ks[3], d, pd.vocab)
+    return params
+
+
+# ======================================================================
+# forward (train / prefill)
+# ======================================================================
+
+def _embed_tokens(params, cfg, pd, tokens):
+    e = params["embed"].astype(jnp.bfloat16 if cfg.dtype == "bfloat16"
+                               else jnp.float32)
+    return e[tokens]
+
+
+def _stack_scan(layers_params, cfg: ArchConfig, pd: PadDims, x, positions,
+                *, enc_out=None, causal=True):
+    """scan over stacked layer params; accumulates MoE aux loss."""
+
+    def body(carry, p_layer):
+        x, aux = carry
+        x, a = block_apply(p_layer, cfg, pd, x, positions,
+                           enc_out=enc_out, causal=causal)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               layers_params)
+    return x, aux
+
+
+def encode(params, frames, cfg: ArchConfig, tp: int = 1):
+    """Encoder stack over (stubbed) frame embeddings -> encoder memory."""
+    pd = pad_dims(cfg, tp)
+    d = cfg.d_model
+    frames = _pin_batch(frames.astype(jnp.bfloat16))
+    s_enc = frames.shape[1]
+    frames = frames + sinusoidal_positions(s_enc, d).astype(frames.dtype)
+    enc_pos = jnp.broadcast_to(jnp.arange(s_enc), frames.shape[:2])
+    enc_x, _ = _stack_scan(params["enc_layers"], cfg, pd, frames,
+                           enc_pos, causal=False)
+    return rmsnorm(params["enc_norm"], enc_x, cfg.norm_eps)
+
+
+def fill_enc_cache(params, cache, frames, cfg: ArchConfig, tp: int = 1):
+    """Serving prefill for enc-dec archs: run the encoder ONCE and project
+    every decoder layer's cross-attention K/V into the cache (decode steps
+    then never touch the encoder — see §Perf bring-up notes)."""
+    from repro.models.transformer import _project_qkv
+
+    pd = pad_dims(cfg, tp)
+    enc_out = encode(params, frames, cfg, tp)
+
+    def proj(p_layer):
+        _, k, v = _project_qkv(p_layer["cross"], cfg, pd, enc_out, None,
+                               kv_x=enc_out)
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    k, v = jax.vmap(proj)(params["layers"])
+    return {**cache, "enc_k": k, "enc_v": v}
+
+
+def forward(params, batch, cfg: ArchConfig, tp: int = 1):
+    """Returns (logits (B, S, vocab_padded), aux_loss)."""
+    pd = pad_dims(cfg, tp)
+    d = cfg.d_model
+
+    if cfg.enc_dec:
+        enc_out = encode(params, batch["frames"], cfg, tp)
+    else:
+        enc_out = None
+
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, cfg, pd, tokens)             # (B, S_txt, d)
+    x = _pin_batch(x)
+
+    if cfg.frontend == "vision" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)         # (B, F, d)
+        x = _pin_batch(jnp.concatenate([patches, x], axis=1))
+
+    b, s, _ = x.shape
+    if cfg.rope == "mrope":
+        positions = batch["positions3"]                    # (B, 3, S)
+    elif cfg.rope == "none":
+        if not cfg.enc_dec and not cfg.rwkv:
+            # absolute sinusoidal positions (seamless decoder gets them via
+            # its own branch; RWKV is position-free by construction)
+            x = x + sinusoidal_positions(s, d).astype(x.dtype)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    x, aux = _stack_scan(params["layers"], cfg, pd, x, positions,
+                         enc_out=enc_out, causal=True)
+    x = _pin_batch(rmsnorm(params["final_norm"], x, cfg.norm_eps))
+
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = x[:, batch["patches"].shape[1]:]               # logits on text
+
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = x @ head.astype(x.dtype).T if cfg.tie_embeddings \
+        else x @ head.astype(x.dtype)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig, tp: int = 1):
+    """Masked CE over the REAL vocab (padded vocab rows are excluded)."""
+    pd = pad_dims(cfg, tp)
+    logits, aux = forward(params, batch, cfg, tp)
+    logits = logits.astype(jnp.float32)
+    if pd.vocab > cfg.vocab:
+        pad_mask = jnp.arange(pd.vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], -1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    ce = (nll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    return ce + cfg.router_aux_weight * aux, (ce, aux)
+
+
+# ======================================================================
+# train step (with microbatch gradient accumulation)
+# ======================================================================
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer, tp: int = 1,
+                    batch_axes=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``cfg.microbatch`` splits the batch for gradient accumulation (an
+    activation-memory knob; see DESIGN.md §5).  ``batch_axes`` (e.g.
+    ("data",) or ("pod","data")) pins the per-microbatch sharding so the
+    reshape (B, ...) -> (m, B/m, ...) does not trigger XLA's involuntary
+    full-rematerialization resharding."""
+
+    def split_micro(batch):
+        m = cfg.microbatch
+
+        def rs(x):
+            b = x.shape[0]
+            y = x.reshape((m, b // m) + x.shape[1:])
+            if batch_axes is not None:
+                spec = P(None, batch_axes, *([None] * (y.ndim - 2)))
+                y = jax.lax.with_sharding_constraint(y, spec)
+            return y
+        return jax.tree.map(rs, batch)
+
+    def step(params, opt_state, batch):
+        if cfg.microbatch > 1:
+            micro = split_micro(batch)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb, cfg, tp)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / cfg.microbatch, grads)
+            loss = loss / cfg.microbatch
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, cfg, tp)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+# ======================================================================
+# decode / serve
+# ======================================================================
+
+def init_cache(cfg: ArchConfig, tp: int, batch: int, cache_len: int,
+               enc_len: int = 0) -> dict:
+    """Decode state, stacked over layers: each leaf (L, B, ...)."""
+    pd = pad_dims(cfg, tp)
+    if cfg.window is not None:
+        cache_len = min(cache_len, cfg.window)
+    one = init_block_cache(cfg, pd, batch, cache_len, enc_len)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape
+                                   ).copy(), one)
+
+
+def serve_step(params, cache, batch, cfg: ArchConfig, tp: int = 1):
+    """One decode step: batch {"token": (B,), "pos": (B,)} (+"enc_out").
+
+    Returns (logits (B, vocab_padded), new_cache)."""
+    pd = pad_dims(cfg, tp)
+    d = cfg.d_model
+    tokens = batch["token"][:, None]                      # (B, 1)
+    pos = batch["pos"]
+    x = _embed_tokens(params, cfg, pd, tokens)
+    if cfg.rope == "none" and not cfg.enc_dec and not cfg.rwkv:
+        x = x + _sinusoid_at(pos, d).astype(x.dtype)[:, None, :]
+    if cfg.rope == "mrope":
+        # text continuation: t == h == w == pos (Qwen2-VL convention)
+        positions = jnp.tile(pos[:, None, None], (1, 3, 1))   # (B, 3, 1)
+    else:
+        positions = pos
+
+    def body(carry, scanned):
+        x = carry
+        p_layer, cache_l = scanned
+        x, new_cache_l = block_decode(p_layer, cfg, pd, x, pos, cache_l)
+        return x, new_cache_l
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)[:, 0]
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = x @ head.astype(x.dtype).T if cfg.tie_embeddings \
+        else x @ head.astype(x.dtype)
+    return logits, new_cache
+
+
+def _sinusoid_at(pos: jnp.ndarray, d: int) -> jnp.ndarray:
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos[:, None].astype(jnp.float32) / (10_000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ======================================================================
+# sharding rules
+# ======================================================================
+
+def _layer_specs(cfg: ArchConfig, prefix_l: bool, fsdp: bool = False) -> dict:
+    """PartitionSpecs for one (stacked) layer dict.  prefix_l adds the
+    leading layer axis (None).
+
+    ``fsdp=True`` additionally shards each weight's non-"model" matrix dim
+    over "data" (ZeRO-3 style: XLA all-gathers weights per layer; params +
+    optimizer state shrink by the data-axis size — required for the 32B+
+    configs to fit v5e HBM)."""
+    L = (None,) if prefix_l else ()
+    fs = "data" if fsdp else None
+
+    def sp(*axes):
+        return P(*(L + axes))
+
+    norm = {"g": sp(None)}
+    attn = {
+        "wq": {"w": sp(fs, "model")},
+        "wk": {"w": sp(fs, "model")},
+        "wv": {"w": sp(fs, "model")},
+        "wo": {"w": sp("model", fs)},
+    }
+    if cfg.qk_norm:
+        attn["qn"] = {"g": sp(None)}
+        attn["kn"] = {"g": sp(None)}
+    if cfg.rwkv:
+        lin = lambda: {"w": sp(fs, "model")}
+        out = lambda: {"w": sp("model", fs)}
+        return {
+            "ln1": norm, "ln2": norm,
+            "tm": {
+                **{f"mix_{n}": sp(None) for n in "rkvwg"},
+                "wr": lin(), "wk": lin(), "wv": lin(), "wg": lin(),
+                "wo": out(),
+                "w0": sp(None),
+                "w_lora_a": sp(None, None),
+                "w_lora_b": sp(None, None),
+                "u": sp("model", None),
+                "ln_x": norm,
+            },
+            "cm": {
+                "mix_k": sp(None), "mix_r": sp(None),
+                "wk": lin(), "wv": out(), "wr": {"w": sp(None, None)},
+            },
+        }
+    d = {
+        "ln1": norm, "ln2": norm,
+        "attn": attn,
+    }
+    if cfg.is_moe:
+        d["moe"] = {
+            "router": {"w": sp(None, None)},
+            "wi": sp("model", fs, None),
+            "wo": sp("model", None, fs),
+        }
+        if cfg.act in ("swiglu", "geglu"):
+            d["moe"]["wg"] = sp("model", fs, None)
+    else:
+        d["ffn"] = {
+            "wi": {"w": sp(fs, "model")},
+            "wo": {"w": sp("model", fs)},
+        }
+        if cfg.act in ("swiglu", "geglu"):
+            d["ffn"]["wg"] = {"w": sp(fs, "model")}
+    if cfg.ssm_state:
+        d["ssm"] = {
+            "in_proj": {"w": sp(fs, "model")},
+            "conv_w": sp("model", None),
+            "conv_b": sp("model"),
+            "x_proj": {"w": sp("model", None)},
+            "dt_proj": {"w": sp(None, "model"), "b": sp("model")},
+            "a_log": sp("model", None),
+            "d_skip": sp("model"),
+            "out_proj": {"w": sp("model", fs)},
+        }
+        d["ln_attn_out"] = norm
+        d["ln_ssm_out"] = norm
+    if cfg.enc_dec:
+        d["ln_cross"] = norm
+        d["cross"] = {
+            "wq": {"w": sp(fs, "model")},
+            "wk": {"w": sp(fs, "model")},
+            "wv": {"w": sp(fs, "model")},
+            "wo": {"w": sp("model", fs)},
+        }
+    return d
+
+
+def param_specs(cfg: ArchConfig, fsdp: bool = False) -> dict:
+    """PartitionSpec pytree matching init_params' structure."""
+    fs = "data" if fsdp else None
+    specs: dict[str, Any] = {
+        "embed": P("model", fs),
+        "final_norm": {"g": P(None)},
+        "layers": _layer_specs(cfg, prefix_l=True, fsdp=fsdp),
+    }
+    if cfg.enc_dec:
+        enc = _layer_specs(
+            dataclasses.replace(cfg, enc_dec=False, ssm_state=0),
+            prefix_l=True, fsdp=fsdp)
+        specs["enc_layers"] = enc
+        specs["enc_norm"] = {"g": P(None)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {"w": P(fs, "model")}
+    return specs
+
+
+def batch_specs(cfg: ArchConfig, kind: str, multi_pod: bool) -> dict:
+    """PartitionSpecs for the batch dict (batch axis over data (+pod))."""
+    b = ("pod", "data") if multi_pod else "data"
+    if kind in ("train", "prefill"):
+        specs = {"tokens": P(b, None), "targets": P(b, None)}
+        if cfg.frontend == "vision":
+            specs["patches"] = P(b, None, None)
+            specs["positions3"] = P(b, None, None)
+        if cfg.enc_dec:
+            specs["frames"] = P(b, None, None)
+        return specs
+    return {"token": P(b), "pos": P(b)}
+
+
+def cache_specs(cfg: ArchConfig, multi_pod: bool) -> dict:
+    """PartitionSpecs for the decode cache (kv heads over model)."""
+    b = ("pod", "data") if multi_pod else "data"
+    if cfg.rwkv:
+        return {
+            "wkv": P(None, b, "model", None, None),
+            "tm_shift": P(None, b, None, None),
+            "cm_shift": P(None, b, None, None),
+        }
+    specs = {
+        "k": P(None, b, None, "model", None),
+        "v": P(None, b, None, "model", None),
+    }
+    if cfg.enc_dec:
+        specs["enc_k"] = P(None, b, None, "model", None)
+        specs["enc_v"] = P(None, b, None, "model", None)
+    if cfg.ssm_state:
+        specs["conv"] = P(None, b, None, "model")
+        specs["ssm"] = P(None, b, "model", None)
+    return specs

@@ -1,0 +1,110 @@
+"""RWKV6 (Finch) blocks: time-mix (WKV attention substitute) + channel-mix.
+
+Follows arXiv:2404.05892 with one simplification recorded in DESIGN.md: the
+token-shift interpolation weights are per-channel learned constants plus a
+low-rank data-dependent term ONLY for the decay w (the paper's ddlerp is
+applied to all five streams; the decay is where it matters most).
+
+The WKV core routes through ``repro.kernels.ops.rwkv6`` — the chunked Pallas
+kernel on TPU, the scan oracle on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import linear, linear_init, rmsnorm, rmsnorm_init
+
+__all__ = ["rwkv_block_init", "rwkv_time_mix", "rwkv_channel_mix"]
+
+
+def rwkv_block_init(key, d: int, d_ff: int, head_dim: int) -> dict:
+    n_heads = d // head_dim
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 32)
+    return {
+        "tm": {
+            "mix_r": jnp.full((d,), 0.5, jnp.float32),
+            "mix_k": jnp.full((d,), 0.5, jnp.float32),
+            "mix_v": jnp.full((d,), 0.5, jnp.float32),
+            "mix_w": jnp.full((d,), 0.5, jnp.float32),
+            "mix_g": jnp.full((d,), 0.5, jnp.float32),
+            "wr": linear_init(ks[0], d, d),
+            "wk": linear_init(ks[1], d, d),
+            "wv": linear_init(ks[2], d, d),
+            "wg": linear_init(ks[3], d, d),
+            "wo": linear_init(ks[4], d, d),
+            # decay: w = exp(-exp(w0 + tanh(x A) B))  (data-dependent, LoRA)
+            "w0": jnp.full((d,), -1.8, jnp.float32),
+            "w_lora_a": jax.random.normal(ks[5], (d, lora), jnp.float32)
+            * 0.01,
+            "w_lora_b": jnp.zeros((lora, d), jnp.float32),
+            "u": jax.random.normal(ks[6], (n_heads, head_dim), jnp.float32)
+            * 0.1,
+            "ln_x": rmsnorm_init(d),     # per-head group norm substitute
+        },
+        "cm": {
+            "mix_k": jnp.full((d,), 0.5, jnp.float32),
+            "mix_r": jnp.full((d,), 0.5, jnp.float32),
+            "wk": linear_init(ks[7], d, d_ff),
+            "wv": linear_init(ks[8], d_ff, d, scale=d_ff ** -0.5),
+            "wr": linear_init(ks[9], d, d),
+        },
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]):
+    """xx_t = x_{t-1}; returns (xx, new_prev) with prev (B, 1, d) carry."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    xx = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    return xx, x[:, -1:]
+
+
+def rwkv_time_mix(p: dict, x: jnp.ndarray, *, head_dim: int,
+                  wkv_state: Optional[jnp.ndarray] = None,
+                  shift_state: Optional[jnp.ndarray] = None,
+                  backend: Optional[str] = "xla"):
+    """x: (B, S, d) -> (y, new_wkv_state, new_shift_state)."""
+    b, s, d = x.shape
+    h = d // head_dim
+    xx, new_shift = _token_shift(x, shift_state)
+
+    def mixed(name):
+        m = p[f"mix_{name}"].astype(x.dtype)
+        return x + (xx - x) * m
+
+    r = linear(p["wr"], mixed("r"))
+    k = linear(p["wk"], mixed("k"))
+    v = linear(p["wv"], mixed("v"))
+    g = linear(p["wg"], mixed("g"))
+    xw = mixed("w")
+    w_log = p["w0"].astype(x.dtype) + jnp.tanh(
+        xw @ p["w_lora_a"].astype(x.dtype)) @ p["w_lora_b"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32)))      # (B,S,d) in (0,1)
+
+    def heads(t):  # (B,S,d) -> (B,H,S,Dh)
+        return jnp.moveaxis(t.reshape(b, s, h, head_dim), 2, 1)
+
+    o, new_state = ops.rwkv6(
+        heads(r), heads(k), heads(v), heads(w), p["u"],
+        state=wkv_state, backend=backend, return_state=True)
+    o = jnp.moveaxis(o, 1, 2).reshape(b, s, d).astype(x.dtype)
+    o = rmsnorm(p["ln_x"], o)
+    o = o * jax.nn.silu(g)
+    return linear(p["wo"], o), new_state, new_shift
+
+
+def rwkv_channel_mix(p: dict, x: jnp.ndarray, *,
+                     shift_state: Optional[jnp.ndarray] = None):
+    """Squared-ReLU channel mixing.  Returns (y, new_shift_state)."""
+    xx, new_shift = _token_shift(x, shift_state)
+    xk = x + (xx - x) * p["mix_k"].astype(x.dtype)
+    xr = x + (xx - x) * p["mix_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(linear(p["wk"], xk)))
+    return jax.nn.sigmoid(linear(p["wr"], xr)) * linear(p["wv"], kk), \
+        new_shift

@@ -1,0 +1,34 @@
+"""Serving-time token sampling (greedy / temperature / top-k / top-p)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_tokens"]
+
+
+def sample_tokens(
+    key,
+    logits: jnp.ndarray,           # (B, V) — REAL vocab only
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> jnp.ndarray:
+    """Sample next tokens; temperature == 0 -> greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative mass >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1)

@@ -1,0 +1,121 @@
+"""Mamba-style selective SSM (hymba's parallel SSM heads).
+
+Continuous-time diagonal state space with input-dependent (selective)
+discretization:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t · h_t + D * x_t
+
+A is diagonal (d_inner, n) with learned negative log; B_t, C_t, dt_t come
+from the input (selective scan).  Sequence processing is a lax.scan (the
+state is (B, d_inner, n)); decode is the same cell applied once.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, linear, linear_init
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode_step"]
+
+
+def mamba_init(key, d: int, *, state: int, conv: int, expand: int) -> dict:
+    di = expand * d
+    dt_rank = max(16, d // 16)
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32)[None, :],
+                 (di, 1))
+    return {
+        "in_proj": linear_init(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (di, conv), jnp.float32)
+        * (conv ** -0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": linear_init(ks[2], di, dt_rank + 2 * state),
+        "dt_proj": {
+            "w": jax.random.normal(ks[3], (dt_rank, di), jnp.float32)
+            * (dt_rank ** -0.5),
+            "b": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        },
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": linear_init(ks[4], di, d, scale=di ** -0.5),
+    }
+
+
+def _ssm_params(p, xc, state_dim: int, dt_rank: int):
+    """Project conv output to (dt, B, C)."""
+    proj = linear(p["x_proj"], xc)                       # (..., r+2n)
+    dt_low = proj[..., :dt_rank]
+    b = proj[..., dt_rank: dt_rank + state_dim]
+    c = proj[..., dt_rank + state_dim:]
+    dt = jax.nn.softplus(
+        dt_low @ p["dt_proj"]["w"].astype(xc.dtype)
+        + p["dt_proj"]["b"].astype(xc.dtype))            # (..., di)
+    return dt, b, c
+
+
+def mamba_apply(p: dict, x: jnp.ndarray, *, state: int,
+                conv_state: Optional[jnp.ndarray] = None,
+                ssm_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """x: (B, S, d) -> y: (B, S, d) (+ (conv_state, ssm_state))."""
+    bsz, s, d = x.shape
+    di = p["a_log"].shape[0]
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    xz = linear(p["in_proj"], x)                         # (B, S, 2di)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt, bmat, cmat = _ssm_params(p, xc, state, dt_rank)  # (B,S,di),(B,S,n)x2
+
+    a = -jnp.exp(p["a_log"]).astype(jnp.float32)         # (di, n)
+    if ssm_state is None:
+        ssm_state = jnp.zeros((bsz, di, state), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                            # (B,di),(B,di),(B,n)
+        da = jnp.exp(dtt[..., None].astype(jnp.float32) * a)   # (B,di,n)
+        h = da * h + (dtt * xt)[..., None].astype(jnp.float32) \
+            * bt[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, ct.astype(jnp.float32))
+        return h, y
+
+    inputs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dt, 1, 0),
+              jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+    # Chunked-residual scan (hymba §Perf): group 16 tokens per outer scan
+    # step, fuse them with unroll, and jax.checkpoint the chunk so the
+    # backward pass saves only per-CHUNK states and recomputes the
+    # intra-chunk residuals — mamba1's per-(channel,state) decay rules out
+    # the WKV-style matmul chunking, but the residual traffic (which
+    # dominates the memory roofline term) still drops ~chunk-fold.
+    chunk = 64
+    if s % chunk == 0 and s > chunk:
+        def chunk_step(h, chunk_inp):
+            h, ys = jax.lax.scan(step, h, chunk_inp, unroll=16)
+            return h, ys
+
+        chunked = jax.tree.map(
+            lambda a: a.reshape((s // chunk, chunk) + a.shape[1:]), inputs)
+        ssm_state, ys = jax.lax.scan(jax.checkpoint(chunk_step),
+                                     ssm_state, chunked)
+        ys = ys.reshape((s,) + ys.shape[2:])
+    else:
+        ssm_state, ys = jax.lax.scan(step, ssm_state, inputs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)           # (B, S, di)
+    y = y + xc * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear(p["out_proj"], y)
+    if return_state:
+        return out, (conv_state, ssm_state)
+    return out
+
+
+def mamba_decode_step(p: dict, x: jnp.ndarray, conv_state, ssm_state, *,
+                      state: int):
+    """One-token step.  x: (B, 1, d) -> (y (B, 1, d), states)."""
+    return mamba_apply(p, x, state=state, conv_state=conv_state,
+                       ssm_state=ssm_state, return_state=True)

@@ -1,0 +1,354 @@
+"""Per-family transformer blocks + scan-over-layers stacks.
+
+One block function per family, all driven by the same stacked-parameter
+layout so ``jax.lax.scan`` over layers keeps the HLO small enough to compile
+512-device programs on this CPU-only host (DESIGN.md §5).
+
+Head/ff/vocab padding for tensor parallelism is decided by ``PadDims``
+(model.py); blocks receive already-padded parameter shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (
+    apply_mrope,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    ffn_init,
+    ffn_apply,
+    linear,
+    linear_init,
+    rmsnorm,
+    rmsnorm_init,
+    rope_freqs,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rwkv import (
+    rwkv_block_init,
+    rwkv_channel_mix,
+    rwkv_time_mix,
+)
+from repro.models.ssm import mamba_apply, mamba_decode_step, mamba_init
+
+__all__ = ["PadDims", "pad_dims", "attn_init", "block_init", "block_apply",
+           "block_decode", "init_block_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PadDims:
+    """Tensor-parallel-padded dimensions (see DESIGN.md §5).
+
+    Padding exists so every sharded axis divides the mesh "model" size; the
+    roofline's MODEL_FLOPS / HLO_FLOPs ratio surfaces its cost.
+    """
+
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    n_experts: int
+    vocab: int
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad_dims(cfg: ArchConfig, tp: int) -> PadDims:
+    if tp <= 1:
+        return PadDims(cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+                       cfg.n_experts, cfg.vocab)
+    hkv = _round_up(cfg.n_kv_heads, tp)
+    groups = max(1, -(-cfg.n_heads // hkv))
+    return PadDims(
+        n_heads=groups * hkv,
+        n_kv_heads=hkv,
+        d_ff=_round_up(cfg.d_ff, tp),
+        n_experts=_round_up(cfg.n_experts, tp) if cfg.n_experts else 0,
+        vocab=_round_up(cfg.vocab, tp) if cfg.vocab else 0,
+    )
+
+
+# =====================================================================
+# attention sub-block (shared by dense / moe / vlm / hybrid / enc-dec)
+# =====================================================================
+
+def attn_init(key, cfg: ArchConfig, pd: PadDims, *, cross: bool = False
+              ) -> dict:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], d, pd.n_heads * dh),
+        "wk": linear_init(ks[1], d, pd.n_kv_heads * dh),
+        "wv": linear_init(ks[2], d, pd.n_kv_heads * dh),
+        "wo": linear_init(ks[3], pd.n_heads * dh, d,
+                          scale=(pd.n_heads * dh) ** -0.5),
+    }
+    if cfg.qk_norm and not cross:
+        p["qn"] = rmsnorm_init(dh)
+        p["kn"] = rmsnorm_init(dh)
+    return p
+
+
+def _project_qkv(p, cfg: ArchConfig, pd: PadDims, x, positions, kv_x=None):
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    kv_x = x if kv_x is None else kv_x
+    sk = kv_x.shape[1]
+    q = linear(p["wq"], x).reshape(b, s, pd.n_heads, dh)
+    k = linear(p["wk"], kv_x).reshape(b, sk, pd.n_kv_heads, dh)
+    v = linear(p["wv"], kv_x).reshape(b, sk, pd.n_kv_heads, dh)
+    if "qn" in p:
+        q = rmsnorm(p["qn"], q, cfg.norm_eps)
+        k = rmsnorm(p["kn"], k, cfg.norm_eps)
+    if cfg.rope == "rope" and positions is not None:
+        freqs = rope_freqs(dh, cfg.rope_theta)
+        q = apply_rope(q, positions, freqs)
+        k = apply_rope(k, positions, freqs)
+    elif cfg.rope == "mrope" and positions is not None:
+        freqs = rope_freqs(dh, cfg.rope_theta)
+        if positions.ndim == 2:
+            # text-only stream (e.g. decode): t == h == w == pos
+            positions = jnp.tile(positions[:, None, :], (1, 3, 1))
+        q = apply_mrope(q, positions, freqs, tuple(cfg.mrope_sections))
+        k = apply_mrope(k, positions, freqs, tuple(cfg.mrope_sections))
+    return q, k, v
+
+
+def attn_apply(p, cfg: ArchConfig, pd: PadDims, x, positions, *,
+               causal=True, window=None, kv_x=None, kv_positions=None,
+               return_kv=False):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    if kv_x is not None:
+        # cross-attention: keys from encoder memory, no rope on q/k
+        q, k, v = _project_qkv(p, cfg, pd, x, None, kv_x=kv_x)
+        causal = False
+        window = None
+    else:
+        q, k, v = _project_qkv(p, cfg, pd, x, positions)
+    ctx = chunked_attention(q, k, v, causal=causal, window=window,
+                            chunk=min(cfg.attn_chunk, s))
+    out = linear(p["wo"], ctx.reshape(b, s, -1))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode(p, cfg: ArchConfig, pd: PadDims, x, pos, k_cache, v_cache,
+                slot, valid, *, kv_x=None):
+    """One-token attention.  x: (B, 1, d); pos: (B,) absolute position;
+    slot: (B,) cache write index (== pos, or pos % window for SWA rings);
+    valid: (B, S_cache) live-slot mask AFTER insertion.
+
+    Returns (out, k_cache, v_cache)."""
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    if kv_x is not None:
+        q, _, _ = _project_qkv(p, cfg, pd, x, None, kv_x=x)
+        # cross-attention cache is the (precomputed) encoder K/V — no update
+        out = decode_attention(q[:, 0], k_cache, v_cache, valid)
+        return linear(p["wo"], out.reshape(b, 1, -1)[..., :]), \
+            k_cache, v_cache
+    q, k, v = _project_qkv(p, cfg, pd, x, pos[:, None])
+    bi = jnp.arange(b)
+    k_cache = k_cache.at[bi, slot].set(k[:, 0])
+    v_cache = v_cache.at[bi, slot].set(v[:, 0])
+    out = decode_attention(q[:, 0], k_cache, v_cache, valid)
+    return linear(p["wo"], out[:, None, :].reshape(b, 1, -1)), \
+        k_cache, v_cache
+
+
+# =====================================================================
+# per-family blocks
+# =====================================================================
+
+def block_init(key, cfg: ArchConfig, pd: PadDims, *, cross: bool = False
+               ) -> dict:
+    """One decoder layer's params (structure depends on family)."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.rwkv:
+        p = rwkv_block_init(ks[0], d, pd.d_ff, cfg.rwkv_head_dim)
+        p["ln1"] = rmsnorm_init(d)
+        p["ln2"] = rmsnorm_init(d)
+        return p
+    p = {
+        "ln1": rmsnorm_init(d),
+        "ln2": rmsnorm_init(d),
+        "attn": attn_init(ks[0], cfg, pd),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_init(ks[1], d, cfg.d_ff_expert, pd.n_experts, cfg.act)
+    else:
+        p["ffn"] = ffn_init(ks[1], d, pd.d_ff, cfg.act)
+    if cfg.ssm_state:           # hymba: parallel SSM heads
+        p["ssm"] = mamba_init(ks[2], d, state=cfg.ssm_state,
+                              conv=cfg.ssm_conv, expand=cfg.ssm_expand)
+        p["ln_attn_out"] = rmsnorm_init(d)
+        p["ln_ssm_out"] = rmsnorm_init(d)
+    if cross:                   # enc-dec decoder layer
+        p["ln_cross"] = rmsnorm_init(d)
+        p["cross"] = attn_init(ks[3], cfg, pd, cross=True)
+    return p
+
+
+def block_apply(p, cfg: ArchConfig, pd: PadDims, x, positions, *,
+                enc_out=None, causal=True):
+    """Full-sequence layer application.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.rwkv:
+        tm, _, _ = rwkv_time_mix(p["tm"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                 head_dim=cfg.rwkv_head_dim)
+        x = x + tm
+        cm, _ = rwkv_channel_mix(p["cm"],
+                                 rmsnorm(p["ln2"], x, cfg.norm_eps))
+        return x + cm, aux
+
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out = attn_apply(p["attn"], cfg, pd, h, positions,
+                          causal=causal, window=cfg.window)
+    if cfg.ssm_state:
+        ssm_out = mamba_apply(p["ssm"], h, state=cfg.ssm_state)
+        attn_out = 0.5 * (rmsnorm(p["ln_attn_out"], attn_out, cfg.norm_eps)
+                          + rmsnorm(p["ln_ssm_out"], ssm_out, cfg.norm_eps))
+    x = x + attn_out
+
+    if enc_out is not None and "cross" in p:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn_apply(p["cross"], cfg, pd, h, None, kv_x=enc_out)
+
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        from repro.models import ctx as _ctx
+        from repro.models.moe import moe_apply_sharded
+        b, s, d = h.shape
+        if _ctx.SHARDED_MOE:
+            y, aux = moe_apply_sharded(
+                p["moe"], h.reshape(b * s, d), top_k=cfg.top_k,
+                act=cfg.act, capacity_factor=cfg.capacity_factor,
+                token_axes=_ctx.ACT_BATCH_AXES)
+        else:
+            y, aux = moe_apply(p["moe"], h.reshape(b * s, d),
+                               top_k=cfg.top_k, act=cfg.act,
+                               capacity_factor=cfg.capacity_factor)
+        x = x + y.reshape(b, s, d)
+    else:
+        x = x + ffn_apply(p["ffn"], h, cfg.act)
+    return x, aux
+
+
+# ---------------------------------------------------------------- decode
+
+def init_block_cache(cfg: ArchConfig, pd: PadDims, batch: int,
+                     cache_len: int, enc_len: int = 0) -> dict:
+    """Per-layer decode state (zeros; stacked over layers by the caller)."""
+    dh = cfg.resolved_head_dim
+    d = cfg.d_model
+    c: dict[str, Any] = {}
+    if cfg.rwkv:
+        hd = cfg.rwkv_head_dim
+        nh = d // hd
+        c["wkv"] = jnp.zeros((batch, nh, hd, hd), jnp.float32)
+        c["tm_shift"] = jnp.zeros((batch, 1, d), jnp.bfloat16)
+        c["cm_shift"] = jnp.zeros((batch, 1, d), jnp.bfloat16)
+        return c
+    c["k"] = jnp.zeros((batch, cache_len, pd.n_kv_heads, dh), jnp.bfloat16)
+    c["v"] = jnp.zeros((batch, cache_len, pd.n_kv_heads, dh), jnp.bfloat16)
+    if cfg.enc_dec and enc_len:
+        # cross-attention K/V: projected ONCE from the encoder memory at
+        # prefill time (recomputing them per decode step costs ~300x the
+        # useful decode FLOPs — see EXPERIMENTS.md §Perf bring-up notes).
+        c["enc_k"] = jnp.zeros((batch, enc_len, pd.n_kv_heads, dh),
+                               jnp.bfloat16)
+        c["enc_v"] = jnp.zeros((batch, enc_len, pd.n_kv_heads, dh),
+                               jnp.bfloat16)
+    if cfg.ssm_state:
+        di = cfg.ssm_expand * d
+        c["conv"] = jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.bfloat16)
+        c["ssm"] = jnp.zeros((batch, di, cfg.ssm_state), jnp.float32)
+    return c
+
+
+def block_decode(p, cfg: ArchConfig, pd: PadDims, x, pos, cache, *,
+                 enc_out=None, enc_kv=None):
+    """One-token layer step.  x: (B, 1, d); pos: (B,).
+    Returns (x, new_cache)."""
+    b = x.shape[0]
+    if cfg.rwkv:
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        tm, wkv, tshift = rwkv_time_mix(
+            p["tm"], h, head_dim=cfg.rwkv_head_dim,
+            wkv_state=cache["wkv"], shift_state=cache["tm_shift"].astype(
+                h.dtype))
+        x = x + tm
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        cm, cshift = rwkv_channel_mix(p["cm"], h,
+                                      shift_state=cache["cm_shift"].astype(
+                                          h.dtype))
+        x = x + cm
+        new_cache = {"wkv": wkv, "tm_shift": tshift.astype(jnp.bfloat16),
+                     "cm_shift": cshift.astype(jnp.bfloat16)}
+        return x, new_cache
+
+    cache_len = cache["k"].shape[1]
+    if cfg.window is not None and cache_len <= cfg.window:
+        slot = pos % cache_len                 # ring buffer (SWA)
+        # valid slots: filled and within window lookback
+        idx = jnp.arange(cache_len)[None, :]
+        filled = idx <= jnp.minimum(pos[:, None], cache_len - 1)
+        # absolute position stored in slot j: the most recent p with
+        # p % cache_len == j and p <= pos  ->  within window by construction
+        valid = filled
+    else:
+        slot = pos
+        idx = jnp.arange(cache_len)[None, :]
+        valid = idx <= pos[:, None]
+        if cfg.window is not None:
+            valid &= idx > (pos[:, None] - cfg.window)
+
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, k_c, v_c = attn_decode(
+        p["attn"], cfg, pd, h, pos, cache["k"], cache["v"], slot, valid)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k_c, v_c
+
+    if cfg.ssm_state:
+        ssm_out, (conv_s, ssm_s) = mamba_decode_step(
+            p["ssm"], h, cache["conv"].astype(h.dtype), cache["ssm"],
+            state=cfg.ssm_state)
+        new_cache["conv"] = conv_s.astype(jnp.bfloat16)
+        new_cache["ssm"] = ssm_s
+        attn_out = 0.5 * (rmsnorm(p["ln_attn_out"], attn_out, cfg.norm_eps)
+                          + rmsnorm(p["ln_ssm_out"], ssm_out, cfg.norm_eps))
+    x = x + attn_out
+
+    if "cross" in p and "enc_k" in cache:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        q, _, _ = _project_qkv(p["cross"], cfg, pd, h, None, kv_x=h)
+        evalid = jnp.ones(cache["enc_k"].shape[:2], bool) if enc_kv is None \
+            else enc_kv
+        out = decode_attention(q[:, 0], cache["enc_k"].astype(h.dtype),
+                               cache["enc_v"].astype(h.dtype), evalid)
+        x = x + linear(p["cross"]["wo"], out[:, None, :].reshape(b, 1, -1))
+
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        # bounded-capacity decode dispatch (§Perf A3); dropless when the
+        # batch is tiny (tests / small-batch serving: exactness > padding).
+        dropless = b * cfg.top_k <= 4 * cfg.n_experts
+        y, _ = moe_apply(p["moe"], h.reshape(b, -1), top_k=cfg.top_k,
+                         act=cfg.act, dropless=dropless,
+                         capacity_factor=cfg.decode_capacity_factor)
+        x = x + y.reshape(b, 1, -1)
+    else:
+        x = x + ffn_apply(p["ffn"], h, cfg.act)
+    return x, new_cache

@@ -1,0 +1,25 @@
+"""Minimal functional optimizer library (no optax in this environment)."""
+
+from repro.optim.adamw import (
+    Optimizer,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    sgd,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_decay_schedule,
+    linear_warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "sgd",
+    "clip_by_global_norm",
+    "constant_schedule",
+    "cosine_decay_schedule",
+    "linear_warmup_cosine",
+]

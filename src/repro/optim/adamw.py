@@ -1,0 +1,112 @@
+"""Functional AdamW / Adam / SGD over arbitrary pytrees.
+
+API mirrors optax: ``opt.init(params) -> opt_state``;
+``opt.update(grads, opt_state, params) -> (updates, opt_state)``;
+apply with ``jax.tree.map(lambda p, u: p + u, params, updates)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adam", "sgd", "clip_by_global_norm"]
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+    def apply(self, grads, opt_state, params):
+        """Convenience: one-call update returning (new_params, new_state)."""
+        updates, new_state = self.update(grads, opt_state, params)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return new_params, new_state
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw(
+    lr: Schedule = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = None,
+) -> Optimizer:
+    """AdamW with optional global-norm clipping (decoupled weight decay)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state["nu"], grads)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr_t = _lr_at(lr, step)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p
+            return u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr: Schedule = 1e-3, **kw) -> Optimizer:
+    return adamw(lr=lr, weight_decay=0.0, **kw)
+
+
+def sgd(lr: Schedule = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mom": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g,
+                               state["mom"], grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mom)
+        else:
+            mom = state["mom"]
+            updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step, "mom": mom}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,33 @@
+"""Learning-rate schedules (callables of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant_schedule", "cosine_decay_schedule",
+           "linear_warmup_cosine"]
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay_schedule(lr: float, decay_steps: int, alpha: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * ((1 - alpha) * cos + alpha)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5
+                    * (1.0 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,197 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+This container is CPU-only; TPU v5e is the TARGET.  We therefore derive the
+three roofline terms from the compiled XLA artifact instead of wall-clock:
+
+    compute term    = HLO_FLOPs      / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes      / (chips * HBM_BW)
+    collective term = collective_bytes / (chips * LINK_BW)
+
+``compiled.cost_analysis()`` runs on the post-SPMD per-device module, so its
+flops/bytes are PER DEVICE; we report global = per_device * chips so the
+formulas above hold verbatim.  collective_bytes is not in cost_analysis —
+we parse the optimized HLO text and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(all-reduce counted twice: reduce + broadcast phases of a ring).
+
+Hardware constants (TPU v5e, per chip):
+    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "RooflineReport",
+           "analyze_compiled", "MODEL_FLOPS"]
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "link_bw": LINK_BW}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# "  %x = f32[8,128]{1,0} all-reduce(...)" or tuple results
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:\w+\[[\d,]*\][^)\s]*\s*,?\s*)+)\s*(?:\))?\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes per collective kind over the optimized HLO.
+
+    all-reduce bytes are doubled (ring reduce + broadcast traffic)."""
+    counts = {k: 0 for k in _COLLECTIVES}
+    bytes_by = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        if f" {kind}(" not in line and f"{kind}(" not in line:
+            continue
+        b = _shape_bytes(shapes)
+        if kind == "all-reduce":
+            b *= 2
+        counts[kind] += 1
+        bytes_by[kind] += b
+    return CollectiveStats(counts=counts, bytes_by_kind=bytes_by)
+
+
+def MODEL_FLOPS(n_params: int, tokens: int, kind: str = "train") -> float:
+    """6*N*D for training; 2*N*D for inference forward passes."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # global quantities (per_device * chips)
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    # terms in seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPs
+    per_device_peak_memory: Optional[float]
+    collective_counts: dict
+    collective_bytes_by_kind: dict
+    note: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "RooflineReport":
+        return RooflineReport(**d)
+
+
+def analyze_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    model_flops: float,
+    note: str = "",
+) -> RooflineReport:
+    """Build the roofline report for one compiled (arch x shape x mesh).
+
+    FLOPs/bytes/collective bytes come from the loop-aware HLO walker
+    (``repro.roofline.hlo_cost``) — XLA's cost_analysis() counts while
+    bodies (every lax.scan) once, under-reporting scanned programs by the
+    trip count."""
+    from repro.roofline.hlo_cost import analyze_hlo_text
+
+    hlo_text = compiled.as_text()
+    hc = analyze_hlo_text(hlo_text)
+    coll = CollectiveStats(
+        counts=dict(hc.collective_counts or {}),
+        bytes_by_kind=dict(hc.collective_counts or {}))
+
+    flops = hc.flops * chips
+    bytes_ = hc.bytes * chips
+    coll_bytes = hc.collective_bytes * chips
+
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = bytes_ / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * LINK_BW)
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)),
+        key=lambda kv: kv[1])[0]
+
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        peak_mem = float(
+            ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:
+        pass
+
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=bytes_,
+        collective_bytes=coll_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / flops) if flops else 0.0,
+        per_device_peak_memory=peak_mem,
+        collective_counts=coll.counts,
+        collective_bytes_by_kind=coll.bytes_by_kind,
+        note=note,
+    )

@@ -1,0 +1,19 @@
+"""TIG substrate: temporal-interaction-graph models + PAC training.
+
+Modules:
+  * ``graph``      — TemporalGraph container, chronological split.
+  * ``data``       — synthetic paper-shaped datasets + JODIE csv loader.
+  * ``sampler``    — host-side most-recent-K temporal neighbor index.
+  * ``time_encode``— TGAT functional time encoding.
+  * ``modules``    — MSG/UPD/attention building blocks (raw JAX).
+  * ``models``     — Jodie/DyRep/TGN/TIGE as one general architecture.
+  * ``batching``   — fixed-shape chronological batch construction.
+  * ``train``      — single-device trainer + evaluation protocol.
+  * ``distributed``— PAC device half (vmap simulation / shard_map SPMD).
+  * ``evaluation`` — AP / AUROC metrics (numpy).
+"""
+
+from repro.tig.graph import TemporalGraph, chronological_split
+from repro.tig.models import TIGConfig
+
+__all__ = ["TemporalGraph", "chronological_split", "TIGConfig"]

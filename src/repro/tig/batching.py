@@ -1,0 +1,124 @@
+"""Host-side batch construction for TIG training (fixed-shape, jit-ready).
+
+Batches are built chronologically.  For every batch we first *sample* the
+temporal neighbors of (src, dst, neg) from the ring-buffer index — neighbors
+strictly precede the batch — and only then *update* the index with the
+batch's edges, so no future information leaks (paper Challenge 1).
+
+All ids in produced batches are LOCAL (device) ids; -1 marks padding.  The
+edge-feature table handed to the device gets one extra zero row at index E
+so -1 neighbor edge indices can be remapped on device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.tig.models import TIGConfig
+from repro.tig.sampler import RecentNeighborBuffer
+
+__all__ = ["LocalStream", "build_batches", "stack_batches", "make_tables"]
+
+
+@dataclasses.dataclass
+class LocalStream:
+    """A device-local edge stream (already localized node ids).
+
+    ``eidx`` indexes into the local edge-feature table (E_local rows).
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    t: np.ndarray
+    eidx: np.ndarray
+    num_local_nodes: int
+    labels: Optional[np.ndarray] = None
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.src)
+
+
+def make_tables(edge_feat: np.ndarray, node_feat: np.ndarray) -> dict:
+    """Device tables with trailing zero dump rows (for -1 remapping)."""
+    e = np.concatenate([edge_feat,
+                        np.zeros((1, edge_feat.shape[1]), edge_feat.dtype)])
+    n = np.concatenate([node_feat,
+                        np.zeros((1, node_feat.shape[1]), node_feat.dtype)])
+    return {"efeat": e, "nfeat": n}
+
+
+def build_batches(
+    stream: LocalStream,
+    cfg: TIGConfig,
+    rng: np.random.Generator,
+    sampler: Optional[RecentNeighborBuffer] = None,
+    neg_pool: Optional[np.ndarray] = None,
+) -> list[dict]:
+    """Chronological fixed-shape batches with pre-sampled neighbors.
+
+    Args:
+      sampler: ring-buffer index; mutated in place (pass a fresh one per
+        epoch/evaluation continuation).  Defaults to a new empty buffer.
+      neg_pool: candidate local ids for negative sampling (defaults to the
+        stream's destination nodes — the JODIE/TGN convention).
+
+    Returns a list of numpy batch dicts matching ``models.step_loss``.
+    """
+    b, k = cfg.batch_size, cfg.num_neighbors
+    if sampler is None:
+        sampler = RecentNeighborBuffer(stream.num_local_nodes, k)
+    if neg_pool is None or len(neg_pool) == 0:
+        neg_pool = np.unique(stream.dst)
+    n_edges = stream.num_edges
+    num_batches = max(1, -(-n_edges // b))
+    batches = []
+    for bi in range(num_batches):
+        lo, hi = bi * b, min((bi + 1) * b, n_edges)
+        size = hi - lo
+        pad = b - size
+
+        def padded(x, fill):
+            out = np.full((b,) + x.shape[1:], fill, dtype=x.dtype)
+            out[:size] = x[lo:hi]
+            return out
+
+        src = padded(stream.src, -1).astype(np.int32)
+        dst = padded(stream.dst, -1).astype(np.int32)
+        t = padded(stream.t.astype(np.float32), 0.0)
+        eidx = padded(stream.eidx, -1)
+        neg = rng.choice(neg_pool, size=b).astype(np.int32)
+        valid = np.zeros(b, dtype=bool)
+        valid[:size] = True
+
+        batch = {
+            "src": src, "dst": dst, "neg": neg,
+            "t": t, "eidx": eidx.astype(np.int32), "valid": valid,
+        }
+        if stream.labels is not None:
+            batch["labels"] = padded(stream.labels, -1)
+
+        # neighbors BEFORE this batch touches the index
+        for role, ids in (("src", src), ("dst", dst), ("neg", neg)):
+            clean = np.where((ids >= 0) & valid, ids, 0)
+            nb, nt, ne = sampler.sample(clean)
+            dead = ~((ids >= 0) & valid)
+            nb[dead] = -1
+            ne[dead] = -1
+            batch[f"nbr_{role}"] = nb.astype(np.int32)
+            batch[f"nbrt_{role}"] = nt.astype(np.float32)
+            batch[f"nbre_{role}"] = ne.astype(np.int32)
+
+        sampler.update(stream.src[lo:hi], stream.dst[lo:hi],
+                       stream.t[lo:hi], stream.eidx[lo:hi])
+        batches.append(batch)
+    return batches
+
+
+def stack_batches(batches: list[dict]) -> dict:
+    """Stack per-step batch dicts into (steps, ...) arrays for lax.scan."""
+    keys = batches[0].keys()
+    return {k: np.stack([b[k] for b in batches]) for k in keys}

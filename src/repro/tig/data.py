@@ -1,0 +1,154 @@
+"""TIG datasets: shape-faithful synthetic generators + JODIE-format loader.
+
+The paper's seven datasets (Tab.II) are not redistributable offline, so we
+provide generators that match their *shape*: bipartite interaction streams
+(user -> item) with power-law degree distributions, bursty repeat behaviour,
+optional dynamic labels (state-change indicators), and the paper's node/edge
+ratios at a configurable scale.  ``load_jodie_csv`` ingests the standard
+``ml_<name>.csv`` format so the real datasets drop in unchanged.
+
+Presets mirror Tab.II at 1/50-ish scale (full-scale shapes are exercised by
+the dry-run, not by CPU training):
+
+    name          nodes   edges    d_e  labels     paper original
+    wikipedia-s   1_000   15_000   172  yes        9_227 / 157_474
+    reddit-s      1_100   67_000   172  yes        10_984 / 672_447
+    mooc-s          720   41_000   172  yes        7_144 / 411_749
+    lastfm-s        200  130_000   172  no         1_980 / 1_293_103
+    ml25m-s       4_400  500_000   100  no         221_588 / 25_000_095
+    dgraphfin-s  97_000   86_000   100  yes(4)     4_889_537 / 4_300_999
+    taobao-s    103_000 2_000_000  100  yes        5_149_747 / 100_135_088
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.tig.graph import TemporalGraph
+
+__all__ = ["synthetic_tig", "load_jodie_csv", "PRESETS"]
+
+PRESETS: dict[str, dict] = {
+    # scale-reduced mirrors of paper Tab.II
+    "wikipedia-s": dict(num_users=250, num_items=750, num_edges=15_000,
+                        d_e=172, d_n=172, labeled=True, classes=2),
+    "reddit-s": dict(num_users=300, num_items=800, num_edges=67_000,
+                     d_e=172, d_n=172, labeled=True, classes=2),
+    "mooc-s": dict(num_users=600, num_items=120, num_edges=41_000,
+                   d_e=172, d_n=172, labeled=True, classes=2),
+    "lastfm-s": dict(num_users=100, num_items=100, num_edges=130_000,
+                     d_e=172, d_n=172, labeled=False, classes=0),
+    "ml25m-s": dict(num_users=1_600, num_items=2_800, num_edges=500_000,
+                    d_e=1, d_n=100, labeled=False, classes=0),
+    "dgraphfin-s": dict(num_users=49_000, num_items=48_000, num_edges=86_000,
+                        d_e=11, d_n=100, labeled=True, classes=4),
+    "taobao-s": dict(num_users=52_000, num_items=51_000, num_edges=2_000_000,
+                     d_e=4, d_n=100, labeled=True, classes=16),
+    # tiny graphs for unit tests / quickstart
+    "tiny": dict(num_users=40, num_items=60, num_edges=1_200,
+                 d_e=16, d_n=16, labeled=True, classes=2),
+    "small": dict(num_users=150, num_items=250, num_edges=6_000,
+                  d_e=32, d_n=32, labeled=True, classes=2),
+}
+
+
+def synthetic_tig(
+    name: str = "tiny",
+    *,
+    seed: int = 0,
+    scale: float = 1.0,
+    zipf_users: float = 1.6,
+    zipf_items: float = 1.4,
+    repeat_prob: float = 0.6,
+) -> TemporalGraph:
+    """Generate a bipartite power-law temporal interaction stream.
+
+    Behavioural model (matches the empirics TIG papers rely on):
+      * user activity and item popularity are zipfian,
+      * with probability ``repeat_prob`` a user re-interacts with one of its
+        recent items (temporal locality -> the recency bias Eq.1 exploits),
+      * timestamps arrive as a Poisson-ish process with daily burstiness,
+      * dynamic labels flip rarely (state-change indicators, JODIE-style).
+    """
+    if name not in PRESETS:
+        raise KeyError(f"unknown preset {name!r}; options: {list(PRESETS)}")
+    p = PRESETS[name]
+    rng = np.random.default_rng(seed)
+    nu = max(int(p["num_users"] * scale), 2)
+    ni = max(int(p["num_items"] * scale), 2)
+    ne = max(int(p["num_edges"] * scale), 10)
+    n = nu + ni
+
+    users = rng.zipf(zipf_users, ne) % nu
+    items = rng.zipf(zipf_items, ne) % ni
+
+    # temporal locality: rewire a fraction of interactions to the user's
+    # previous item (generates the repeat-interaction bursts of real logs).
+    prev_item = np.full(nu, -1, dtype=np.int64)
+    repeat = rng.uniform(size=ne) < repeat_prob
+    for e in range(ne):
+        u = users[e]
+        if repeat[e] and prev_item[u] >= 0:
+            items[e] = prev_item[u]
+        prev_item[u] = items[e]
+
+    src = users.astype(np.int64)
+    dst = (nu + items).astype(np.int64)
+
+    # bursty timestamps: piecewise-intensity Poisson over ~30 "days"
+    day = rng.integers(0, 30, ne)
+    within = rng.exponential(1.0, ne)
+    t = np.sort(day * 86_400.0 + within.cumsum() / within.sum() * 86_400.0)
+
+    edge_feat = rng.normal(0, 1, (ne, p["d_e"])).astype(np.float32)
+    node_feat = np.zeros((n, p["d_n"]), dtype=np.float32)  # paper: zeros
+
+    labels = None
+    if p["labeled"]:
+        # rare state changes of the source user
+        labels = np.full(ne, 0, dtype=np.int64)
+        flip = rng.uniform(size=ne) < 0.005 * p["classes"]
+        labels[flip] = rng.integers(1, max(p["classes"], 2), flip.sum())
+
+    return TemporalGraph(
+        src=src, dst=dst, t=t,
+        edge_feat=edge_feat, node_feat=node_feat,
+        labels=labels, name=name,
+    )
+
+
+def load_jodie_csv(
+    path: str,
+    *,
+    d_n: int = 172,
+    name: Optional[str] = None,
+) -> TemporalGraph:
+    """Load the standard JODIE/TGN ``ml_<name>.csv`` interaction format:
+
+        user_id, item_id, timestamp, state_label, feat_0, ..., feat_k
+
+    Item ids are offset to live after user ids (bipartite convention).
+    """
+    raw = np.genfromtxt(path, delimiter=",", skip_header=1)
+    users = raw[:, 0].astype(np.int64)
+    items = raw[:, 1].astype(np.int64)
+    t = raw[:, 2].astype(np.float64)
+    labels = raw[:, 3].astype(np.int64)
+    feats = raw[:, 4:].astype(np.float32)
+    if feats.shape[1] == 0:
+        feats = np.zeros((len(users), 1), dtype=np.float32)
+    nu = int(users.max()) + 1
+    ni = int(items.max()) + 1
+    order = np.argsort(t, kind="stable")
+    return TemporalGraph(
+        src=users[order],
+        dst=(nu + items)[order],
+        t=t[order],
+        edge_feat=feats[order],
+        node_feat=np.zeros((nu + ni, d_n), dtype=np.float32),
+        labels=labels[order],
+        name=name or os.path.basename(path),
+    )

@@ -1,0 +1,402 @@
+"""PAC — distributed parallel training of TIG models (paper §II-C, Alg.2).
+
+The device half of the Parallel Acceleration Component.  One *device epoch*
+is a single jitted program per device:
+
+    scan over lockstep global steps s in [0, steps_per_epoch):
+      1. if s is my cycle start:  reset node memory (Alg.2 line 6-7)
+      2. batch = my_batches[s % my_num_batches]   (wrap-around loop)
+      3. loss, grads = step_loss(batch)           (TIG model, models.py)
+      4. grads = pmean(grads, axis="part")        (DDP gradient sync)
+      5. params, opt_state = adamw(...)           (replicated update)
+      6. if s is my cycle end:    backup memory   (Alg.2 line 10-11)
+    epoch end:
+      7. memory <- backup                         (restore complete state)
+      8. shared-node sync: all_gather shared rows over "part", each device
+         adopts the replica with the largest last-update timestamp
+         ("latest", the paper's choice) or the mean.
+
+The SAME function runs under two executors:
+  * ``jax.vmap(..., axis_name="part")``  — single-host simulation (tests,
+    CPU benchmarks; collectives become batched ops, semantics identical);
+  * ``jax.shard_map(..., mesh)``         — real multi-device SPMD (the
+    production path; also used by the dry-run on 512 host devices).
+
+Host-side epoch planning (partition -> super-partitions -> localized padded
+streams) lives here too, built on ``repro.core.pac``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.pac import (
+    CycleSchedule,
+    build_subgraph,
+    cycle_schedule,
+    make_local_indices,
+    shuffle_combine,
+)
+from repro.core.sep import PartitionResult
+from repro.optim import Optimizer
+from repro.tig.batching import LocalStream, build_batches, stack_batches
+from repro.tig.graph import TemporalGraph
+from repro.tig.models import TIGConfig, init_params, init_state, step_loss
+from repro.tig.sampler import RecentNeighborBuffer
+from repro.tig.train import time_scale_of
+
+__all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "pac_train",
+           "PACResult"]
+
+
+# ======================================================================
+# host-side epoch planning
+# ======================================================================
+
+@dataclasses.dataclass
+class EpochPlan:
+    """Everything one epoch of PAC needs, stacked over the device axis."""
+
+    batches: dict                 # pytree of (N_dev, steps, ...) arrays
+    n_batches: np.ndarray         # (N_dev,) real batches per device
+    nfeat_local: np.ndarray       # (N_dev, cap+1, d_n)
+    efeat_local: np.ndarray       # (N_dev, e_cap+1, d_e) — per-device edge
+                                  # features (§Perf C2: sharded, never the
+                                  # full replicated table)
+    shared_local: np.ndarray      # (N_dev, S) local rows of shared nodes
+    node_lists: list[np.ndarray]  # global ids per device
+    capacity: int                 # padded local node count
+    edge_capacity: int            # padded local edge count
+    steps: int
+    edges_per_device: np.ndarray  # (N_dev,)
+
+
+def plan_epoch(
+    g: TemporalGraph,
+    node_lists: list[np.ndarray],
+    shared_nodes: np.ndarray,
+    cfg: TIGConfig,
+    rng: np.random.Generator,
+    *,
+    steps_override: Optional[int] = None,
+    time_scale: Optional[float] = None,
+) -> EpochPlan:
+    """Localize each device's sub-graph and pre-build its padded batch
+    stream (with wrap-around replay up to steps_per_epoch)."""
+    n_dev = len(node_lists)
+    time_scale = time_scale or time_scale_of(g.t)
+    local = make_local_indices(node_lists, g.num_nodes)
+    cap = local[0].capacity if local else 0
+
+    streams: list[LocalStream] = []
+    edges_per_device = np.zeros(n_dev, dtype=np.int64)
+    edge_globals: list[np.ndarray] = []
+    for k, (nodes, li) in enumerate(zip(node_lists, local)):
+        eidx = build_subgraph(g.src, g.dst, nodes, g.num_nodes)
+        edges_per_device[k] = len(eidx)
+        edge_globals.append(eidx)
+        streams.append(
+            LocalStream(
+                src=li.to_local[g.src[eidx]].astype(np.int64),
+                dst=li.to_local[g.dst[eidx]].astype(np.int64),
+                t=g.t[eidx] / time_scale,
+                # LOCAL edge ids into the device's own feature table
+                # (§Perf C2: the paper keeps edge data per GPU, so do we)
+                eidx=np.arange(len(eidx), dtype=np.int64),
+                num_local_nodes=cap,
+                labels=None if g.labels is None else g.labels[eidx],
+            )
+        )
+
+    sched = cycle_schedule(edges_per_device, cfg.batch_size)
+    steps = steps_override or sched.steps_per_epoch
+
+    per_dev_stacked = []
+    for k, stream in enumerate(streams):
+        sampler = RecentNeighborBuffer(cap, cfg.num_neighbors)
+        real = build_batches(stream, cfg, rng, sampler)
+        # Alg.2 wrap-around: replay from the start; the neighbor index is
+        # implicitly reset each cycle because replayed batches reuse the
+        # first-cycle samples.
+        seq = [real[s % len(real)] for s in range(steps)]
+        per_dev_stacked.append(stack_batches(seq))
+    batches = {
+        k: np.stack([d[k] for d in per_dev_stacked])
+        for k in per_dev_stacked[0]
+    }
+    # labels are host-side only (classification head is trained post-hoc)
+    batches.pop("labels", None)
+
+    nfeat_local = np.zeros((n_dev, cap + 1, g.dim_node), np.float32)
+    for k, li in enumerate(local):
+        real_ids = li.globals_[: li.num_real]
+        nfeat_local[k, : li.num_real] = g.node_feat[real_ids]
+
+    e_cap = int(edges_per_device.max()) if n_dev else 0
+    efeat_local = np.zeros((n_dev, e_cap + 1, g.dim_edge), np.float32)
+    for k, eg in enumerate(edge_globals):
+        efeat_local[k, : len(eg)] = g.edge_feat[eg]
+
+    shared_local = np.zeros((n_dev, len(shared_nodes)), np.int32)
+    for k, li in enumerate(local):
+        rows = li.to_local[shared_nodes] if len(shared_nodes) else \
+            np.zeros(0, np.int32)
+        if len(shared_nodes) and (rows < 0).any():
+            raise ValueError(
+                "shared nodes must be present on every device "
+                "(Alg.1 line 20 shared_to_all)")
+        shared_local[k] = rows
+
+    real_batches = np.maximum(1, -(-edges_per_device // cfg.batch_size))
+    return EpochPlan(
+        batches=batches,
+        n_batches=np.minimum(real_batches, steps).astype(np.int32),
+        nfeat_local=nfeat_local,
+        efeat_local=efeat_local,
+        shared_local=shared_local,
+        node_lists=list(node_lists),
+        capacity=cap,
+        edge_capacity=e_cap,
+        steps=steps,
+        edges_per_device=edges_per_device,
+    )
+
+
+# ======================================================================
+# the device-epoch program
+# ======================================================================
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def device_epoch(
+    params,
+    opt_state,
+    batches,        # pytree of (steps, ...) — this device's stream
+    n_batches,      # () int32 — real batches (cycle length)
+    nfeat_local,    # (cap+1, d_n)
+    efeat,          # (E+1, d_e) replicated
+    shared_local,   # (S,) int32
+    *,
+    cfg: TIGConfig,
+    opt: Optimizer,
+    steps: int,
+    capacity: int,
+    sync_mode: Literal["latest", "mean"] = "latest",
+    axis: str = "part",
+):
+    """One epoch on one device (runs under vmap or shard_map over ``axis``)."""
+    tables = {"efeat": efeat, "nfeat": nfeat_local}
+    fresh = init_state(cfg, capacity)
+
+    def scan_step(carry, batch):
+        params, opt_state, state, backup, s = carry
+        # Alg.2 lines 6-7: reset memory at each data-cycle start
+        is_start = (s % n_batches) == 0
+        state = _tree_where(is_start, fresh, state)
+        (loss, (state, _aux)), grads = jax.value_and_grad(
+            step_loss, has_aux=True
+        )(params, state, batch, tables, cfg)
+        grads = jax.lax.pmean(grads, axis)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        # Alg.2 lines 10-11: back up memory at each data-cycle end
+        is_end = ((s + 1) % n_batches) == 0
+        backup = _tree_where(is_end, state, backup)
+        return (params, opt_state, state, backup, s + 1), loss
+
+    carry0 = (params, opt_state, fresh, fresh, jnp.zeros((), jnp.int32))
+    (params, opt_state, _state, backup, _), losses = jax.lax.scan(
+        scan_step, carry0, batches, length=steps)
+
+    # epoch end: restore the latest complete-cycle memory (Alg.2)
+    state = backup
+
+    # shared-node memory synchronization (paper §II-C).
+    # §Perf iteration C1: instead of all-gathering the full (N_dev, S, d)
+    # replica rows (O(N*S*d) link bytes), gather only the (N_dev, S)
+    # timestamps, compute the argmax winner, and combine rows with a
+    # winner-masked psum — O(N*S + S*d) bytes, ~d-fold less traffic.
+    if shared_local.shape[0] > 0:
+        rows_m = state["mem"][shared_local]          # (S, d)
+        rows_m2 = state["mem2"][shared_local]
+        rows_t = state["last"][shared_local]         # (S,)
+        if sync_mode == "latest":
+            all_t = jax.lax.all_gather(rows_t, axis)     # (N_dev, S)
+            win = jnp.argmax(all_t, axis=0)              # (S,)
+            me = jax.lax.axis_index(axis)
+            mine = (win == me)[:, None].astype(rows_m.dtype)
+            new_m = jax.lax.psum(rows_m * mine, axis)
+            new_m2 = jax.lax.psum(rows_m2 * mine, axis)
+            new_t = jnp.max(all_t, axis=0)
+        else:
+            n = jax.lax.psum(1, axis)
+            new_m = jax.lax.psum(rows_m, axis) / n
+            new_m2 = jax.lax.psum(rows_m2, axis) / n
+            new_t = jax.lax.psum(rows_t, axis) / n
+        state = {
+            **state,
+            "mem": state["mem"].at[shared_local].set(new_m),
+            "mem2": state["mem2"].at[shared_local].set(new_m2),
+            "last": state["last"].at[shared_local].set(new_t),
+        }
+
+    return params, opt_state, state, losses
+
+
+def make_pac_epoch(
+    cfg: TIGConfig,
+    opt: Optimizer,
+    steps: int,
+    capacity: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    sync_mode: Literal["latest", "mean"] = "latest",
+):
+    """Build the jitted epoch executor.
+
+    mesh=None  -> vmap simulation over the leading device axis (single host
+                  device; used by CPU tests/benchmarks).
+    mesh given -> shard_map over mesh axis "part" (real SPMD; the dry-run
+                  compiles this exact program for the production mesh).
+    """
+    kernel = functools.partial(
+        device_epoch, cfg=cfg, opt=opt, steps=steps, capacity=capacity,
+        sync_mode=sync_mode,
+    )
+
+    if mesh is None:
+        vmapped = jax.vmap(
+            kernel,
+            in_axes=(None, None, 0, 0, 0, 0, 0),
+            out_axes=(0, 0, 0, 0),
+            axis_name="part",
+        )
+
+        @jax.jit
+        def run(params, opt_state, batches, n_batches, nfeat_local, efeat,
+                shared_local):
+            p, o, state, losses = vmapped(
+                params, opt_state, batches, n_batches, nfeat_local, efeat,
+                shared_local)
+            # params/opt_state identical across devices (pmean'd grads)
+            p0 = jax.tree.map(lambda x: x[0], p)
+            o0 = jax.tree.map(lambda x: x[0], o)
+            return p0, o0, state, losses
+
+        return run
+
+    part = P("part")
+    rep = P()
+
+    def body(params, opt_state, batches, n_batches, nfeat_local, efeat,
+             shared_local):
+        squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
+        p, o, state, losses = kernel(
+            params, opt_state, squeeze(batches), squeeze(n_batches),
+            squeeze(nfeat_local), squeeze(efeat), squeeze(shared_local))
+        expand = lambda t: jax.tree.map(lambda x: x[None], t)
+        return p, o, expand(state), expand(losses)
+
+    smapped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(rep, rep, part, part, part, part, part),
+        out_specs=(rep, rep, part, part),
+        check_vma=False,
+    )
+    return jax.jit(smapped)
+
+
+# ======================================================================
+# full training driver
+# ======================================================================
+
+@dataclasses.dataclass
+class PACResult:
+    params: dict
+    memory_states: dict           # stacked (N_dev, ...) post-sync states
+    losses: list                  # per epoch: (N_dev, steps_e) arrays
+    derived_speedup: float
+    edges_per_device: np.ndarray
+    plan: EpochPlan
+
+    def mean_loss_per_epoch(self) -> np.ndarray:
+        return np.array([float(l.mean()) for l in self.losses])
+
+
+def pac_train(
+    g_train: TemporalGraph,
+    partition: PartitionResult,
+    cfg: TIGConfig,
+    *,
+    num_devices: int,
+    epochs: int = 3,
+    lr: float = 1e-3,
+    seed: int = 0,
+    shuffle_parts: bool = True,
+    sync_mode: Literal["latest", "mean"] = "latest",
+    mesh: Optional[Mesh] = None,
+) -> PACResult:
+    """Train a TIG model with SEP partitions + PAC (the paper's pipeline).
+
+    ``partition`` may have more parts than devices (|P| > N): parts are then
+    shuffle-combined into N super-partitions before every epoch (Fig.7).
+    """
+    from repro.optim import adamw
+
+    rng = np.random.default_rng(seed)
+    small_parts = partition.node_lists()
+    time_scale = time_scale_of(g_train.t)
+
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw(lr=lr, max_grad_norm=1.0)
+    opt_state = opt.init(params)
+
+    all_losses = []
+    epoch_fn = None
+    last_plan = None
+    compiled_key = None
+    for ep in range(epochs):
+        if shuffle_parts and len(small_parts) > num_devices:
+            node_lists = shuffle_combine(small_parts, num_devices, rng)
+        elif len(small_parts) == num_devices:
+            node_lists = small_parts
+        else:
+            node_lists = shuffle_combine(
+                small_parts, num_devices, np.random.default_rng(seed))
+        plan = plan_epoch(g_train, node_lists, partition.shared_nodes,
+                          cfg, rng, time_scale=time_scale)
+        key = (plan.steps, plan.capacity, plan.edge_capacity)
+        if epoch_fn is None or key != compiled_key:
+            epoch_fn = make_pac_epoch(
+                cfg, opt, plan.steps, plan.capacity, mesh=mesh,
+                sync_mode=sync_mode)
+            compiled_key = key
+        batches_j = {k: jnp.asarray(v) for k, v in plan.batches.items()}
+        params, opt_state, states, losses = epoch_fn(
+            params, opt_state, batches_j,
+            jnp.asarray(plan.n_batches),
+            jnp.asarray(plan.nfeat_local),
+            jnp.asarray(plan.efeat_local),
+            jnp.asarray(plan.shared_local))
+        all_losses.append(np.asarray(losses))
+        last_plan = plan
+
+    from repro.core.pac import derived_speedup as dsp
+
+    return PACResult(
+        params=params,
+        memory_states=jax.tree.map(np.asarray, states),
+        losses=all_losses,
+        derived_speedup=dsp(last_plan.edges_per_device),
+        edges_per_device=last_plan.edges_per_device,
+        plan=last_plan,
+    )

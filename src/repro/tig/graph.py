@@ -1,0 +1,114 @@
+"""Temporal Interaction Graph container (paper §II-A).
+
+G = (V, E) with E = {(i, j, t)} a chronologically-ordered interaction stream.
+Node/edge features default to zero vectors for non-attributed graphs (paper
+§II-A); dynamic node labels (state-change indicators) are optional and enable
+the node-classification task (Wikipedia/Reddit/MOOC-style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["TemporalGraph", "chronological_split"]
+
+
+@dataclasses.dataclass
+class TemporalGraph:
+    """An edge stream with features.
+
+    Attributes:
+      src, dst: (E,) int64 node ids in [0, num_nodes).
+      t: (E,) float64 timestamps, non-decreasing.
+      edge_feat: (E, d_e) float32.
+      node_feat: (num_nodes, d_n) float32.
+      labels: optional (E,) int64 dynamic labels of the *source* node at the
+        interaction time (the JODIE convention), -1 where unlabeled.
+      name: dataset tag.
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    t: np.ndarray
+    edge_feat: np.ndarray
+    node_feat: np.ndarray
+    labels: Optional[np.ndarray] = None
+    name: str = "tig"
+
+    def __post_init__(self):
+        e = len(self.src)
+        assert len(self.dst) == e and len(self.t) == e
+        assert self.edge_feat.shape[0] == e
+        assert (np.diff(self.t) >= 0).all(), "edges must be chronological"
+
+    @property
+    def num_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.src)
+
+    @property
+    def dim_edge(self) -> int:
+        return self.edge_feat.shape[1]
+
+    @property
+    def dim_node(self) -> int:
+        return self.node_feat.shape[1]
+
+    def slice_edges(self, idx: np.ndarray, name: Optional[str] = None
+                    ) -> "TemporalGraph":
+        """Sub-stream by edge indices (keeps global node id space)."""
+        return TemporalGraph(
+            src=self.src[idx],
+            dst=self.dst[idx],
+            t=self.t[idx],
+            edge_feat=self.edge_feat[idx],
+            node_feat=self.node_feat,
+            labels=None if self.labels is None else self.labels[idx],
+            name=name or self.name,
+        )
+
+    def stats(self) -> dict:
+        return {
+            "name": self.name,
+            "num_nodes": self.num_nodes,
+            "num_edges": self.num_edges,
+            "d_n": self.dim_node,
+            "d_e": self.dim_edge,
+            "classes": (
+                0 if self.labels is None
+                else int(self.labels[self.labels >= 0].max()) + 1
+                if (self.labels >= 0).any() else 0
+            ),
+        }
+
+
+def chronological_split(
+    g: TemporalGraph,
+    train_frac: float = 0.70,
+    val_frac: float = 0.15,
+) -> tuple[TemporalGraph, TemporalGraph, TemporalGraph, np.ndarray]:
+    """70/15/15 chronological edge split (paper §III-A, 'before implementing
+    our SEP' — the partitioner only ever sees the training split).
+
+    Returns (train, val, test, inductive_nodes): ``inductive_nodes`` are
+    nodes that never appear in training — the inductive link-prediction
+    evaluation (paper Tab.IV) restricts to edges touching them.
+    """
+    e = g.num_edges
+    n_train = int(e * train_frac)
+    n_val = int(e * (train_frac + val_frac))
+    idx = np.arange(e)
+    train = g.slice_edges(idx[:n_train], f"{g.name}/train")
+    val = g.slice_edges(idx[n_train:n_val], f"{g.name}/val")
+    test = g.slice_edges(idx[n_val:], f"{g.name}/test")
+    seen = np.zeros(g.num_nodes, dtype=bool)
+    seen[train.src] = True
+    seen[train.dst] = True
+    inductive_nodes = np.nonzero(~seen)[0]
+    return train, val, test, inductive_nodes

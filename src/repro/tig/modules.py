@@ -1,0 +1,133 @@
+"""Neural building blocks for TIG models (raw JAX, functional params).
+
+Implements the module palette of paper Fig.6 — Message (MSG), Aggregation,
+State Update (UPD: GRU/RNN cells), Embedding (identity / Jodie time
+projection / temporal graph attention) and the link decoder — as pure
+``init``/``apply`` function pairs over parameter pytrees.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "dense",
+    "mlp_init", "mlp",
+    "gru_init", "gru",
+    "rnn_init", "rnn",
+    "attn_init", "temporal_attention",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> dict:
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    wkey, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(wkey, (d_in, d_out), jnp.float32) * scale,
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def mlp_init(key, dims: Sequence[int]) -> dict:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": dense_init(keys[i], dims[i], dims[i + 1])
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x)
+        if i + 1 < n:
+            x = jax.nn.relu(x)
+    return x
+
+
+def gru_init(key, d_in: int, d_h: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "xz": dense_init(k1, d_in, 3 * d_h),
+        "hz": dense_init(k2, d_h, 3 * d_h),
+    }
+
+
+def gru(p: dict, x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Standard GRU cell: the paper's default UPD module (TGN/TIGE)."""
+    d_h = h.shape[-1]
+    gx = dense(p["xz"], x)
+    gh = dense(p["hz"], h)
+    rx, zx, nx = jnp.split(gx, 3, axis=-1)
+    rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    return (1.0 - z) * n + z * h
+
+
+def rnn_init(key, d_in: int, d_h: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"x": dense_init(k1, d_in, d_h), "h": dense_init(k2, d_h, d_h)}
+
+
+def rnn(p: dict, x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """tanh-RNN cell: Jodie's UPD module."""
+    return jnp.tanh(dense(p["x"], x) + dense(p["h"], h))
+
+
+def attn_init(key, d_node: int, d_kv: int, d_out: int, n_heads: int) -> dict:
+    """Temporal graph attention (TGN embedding module, 1 layer).
+
+    Query dim: d_node (node state ++ time enc already concatenated by the
+    caller); key/value dim: d_kv (neighbor state ++ edge feat ++ time enc).
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_h = d_out
+    assert d_h % n_heads == 0
+    return {
+        "q": dense_init(k1, d_node, d_h),
+        "k": dense_init(k2, d_kv, d_h),
+        "v": dense_init(k3, d_kv, d_h),
+        "o": dense_init(k4, d_node + d_h, d_out),
+    }
+
+
+def temporal_attention(
+    p: dict,
+    query_in: jnp.ndarray,    # (B, d_node)
+    kv_in: jnp.ndarray,       # (B, K, d_kv)
+    mask: jnp.ndarray,        # (B, K) bool — True for real neighbors
+    n_heads: int = 2,
+    backend: str | None = "xla",
+) -> jnp.ndarray:
+    """Masked single-layer multi-head attention over sampled neighbors.
+
+    ``backend``: "xla" (inline jnp), or "auto"/"pallas"/"interpret" to route
+    the fused attention core through ``repro.kernels.ops``.
+    """
+    nh = n_heads
+    b, k, _ = kv_in.shape
+    q = dense(p["q"], query_in).reshape(b, nh, -1)           # (B, H, dh)
+    kk = dense(p["k"], kv_in).reshape(b, k, nh, -1)          # (B, K, H, dh)
+    vv = dense(p["v"], kv_in).reshape(b, k, nh, -1)
+    if backend != "xla":
+        from repro.kernels import ops
+        ctx = ops.temporal_attention(q, kk, vv, mask,
+                                     backend=backend).reshape(b, -1)
+    else:
+        scores = jnp.einsum("bhd,bkhd->bhk", q, kk) / jnp.sqrt(q.shape[-1])
+        scores = jnp.where(mask[:, None, :], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        # nodes with zero neighbors: make attention output exactly zero
+        any_nbr = mask.any(axis=-1)[:, None, None]
+        att = jnp.where(any_nbr, att, 0.0)
+        ctx = jnp.einsum("bhk,bkhd->bhd", att, vv).reshape(b, -1)
+    return dense(p["o"], jnp.concatenate([query_in, ctx], axis=-1))

@@ -1,0 +1,28 @@
+"""TGAT-style functional time encoding Phi (paper §II-C, [3]).
+
+    Phi(dt) = cos(dt * w + b),   w_k = 1 / 10^{alpha * k / d}
+
+The geometric frequency ladder covers time scales from seconds to months;
+``w`` and ``b`` are trainable (initialized to the TGAT values).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["init_time_encoder", "time_encode"]
+
+
+def init_time_encoder(dim: int, max_scale: float = 9.0) -> dict:
+    """Trainable params for a ``dim``-dimensional time encoding."""
+    w = 1.0 / np.power(10.0, max_scale * np.arange(dim) / max(dim - 1, 1))
+    return {
+        "w": jnp.asarray(w, dtype=jnp.float32),
+        "b": jnp.zeros((dim,), dtype=jnp.float32),
+    }
+
+
+def time_encode(params: dict, dt: jnp.ndarray) -> jnp.ndarray:
+    """Phi(dt): shape (..., dim) for dt of shape (...)."""
+    return jnp.cos(dt[..., None] * params["w"] + params["b"])

@@ -1,0 +1,389 @@
+"""Single-device TIG training & evaluation (the paper's non-partitioned
+baseline — 'Single-GPU' / 'w/o Partitioning' rows of Tab.III/IV).
+
+The distributed PAC trainer (multi-device) is ``repro.tig.distributed``; it
+reuses the step functions defined here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, Optimizer
+from repro.tig.batching import (
+    LocalStream,
+    build_batches,
+    make_tables,
+)
+from repro.tig.evaluation import average_precision, roc_auc
+from repro.tig.graph import TemporalGraph
+from repro.tig.models import TIGConfig, init_params, init_state, step_loss
+from repro.tig.sampler import RecentNeighborBuffer
+
+__all__ = [
+    "graph_as_stream",
+    "make_train_step",
+    "make_eval_step",
+    "train_epoch",
+    "evaluate_stream",
+    "train_single",
+    "train_classifier_head",
+]
+
+
+def time_scale_of(t: np.ndarray) -> float:
+    """Mean inter-event gap — timestamps are divided by this so Δt is O(1)
+    (keeps Jodie's (1 + Δt·w) projection and Φ's frequency ladder in a sane
+    numeric range regardless of the dataset's clock unit)."""
+    if len(t) < 2:
+        return 1.0
+    gaps = np.diff(np.sort(t))
+    m = float(gaps.mean())
+    return m if m > 0 else 1.0
+
+
+def graph_as_stream(g: TemporalGraph) -> tuple[LocalStream, dict]:
+    """Treat the whole graph as one device-local stream (ids unchanged).
+
+    Timestamps are rescaled to mean-gap units (see ``time_scale_of``)."""
+    scale = time_scale_of(g.t)
+    stream = LocalStream(
+        src=g.src.astype(np.int64),
+        dst=g.dst.astype(np.int64),
+        t=g.t / scale,
+        eidx=np.arange(g.num_edges, dtype=np.int64),
+        num_local_nodes=g.num_nodes,
+        labels=g.labels,
+    )
+    return stream, make_tables(g.edge_feat, g.node_feat)
+
+
+def make_train_step(cfg: TIGConfig, opt: Optimizer):
+    """jit'd (params, opt_state, state, batch, tables) -> updated + loss."""
+
+    @jax.jit
+    def step(params, opt_state, state, batch, tables):
+        (loss, (new_state, _aux)), grads = jax.value_and_grad(
+            step_loss, has_aux=True
+        )(params, state, batch, tables, cfg)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        return params, opt_state, new_state, loss
+
+    return step
+
+
+def make_eval_step(cfg: TIGConfig):
+    """jit'd forward-only step: returns (new_state, aux) with logits."""
+
+    @jax.jit
+    def step(params, state, batch, tables):
+        _loss, (new_state, aux) = step_loss(params, state, batch, tables, cfg)
+        return new_state, aux
+
+    return step
+
+
+def train_epoch(params, opt_state, state, batches, tables_j, step_fn):
+    """One pass over prepared batches; returns mean loss."""
+    losses = []
+    for batch in batches:
+        bj = {k: jnp.asarray(v) for k, v in batch.items() if k != "labels"}
+        params, opt_state, state, loss = step_fn(
+            params, opt_state, state, bj, tables_j)
+        losses.append(float(loss))
+    return params, opt_state, state, float(np.mean(losses))
+
+
+def evaluate_stream(
+    params,
+    cfg: TIGConfig,
+    state,
+    batches,
+    tables_j,
+    eval_step,
+    inductive_edge_mask: Optional[np.ndarray] = None,
+    collect_embeddings: bool = False,
+):
+    """Run a chronological stream through the model (memory keeps updating,
+    params frozen) and compute link-prediction AP.
+
+    Returns dict with transductive AP/AUC, optional inductive AP (edges
+    touching never-seen-in-train nodes), optional collected src embeddings,
+    and the post-stream state (for continuing to the next split).
+    """
+    pos_all, neg_all, ind_mask_all, embeds, labels = [], [], [], [], []
+    offset = 0
+    for batch in batches:
+        bj = {k: jnp.asarray(v) for k, v in batch.items() if k != "labels"}
+        state, aux = eval_step(params, state, bj, tables_j)
+        valid = np.asarray(batch["valid"])
+        n = int(valid.sum())
+        pos_all.append(np.asarray(aux["pos_logit"])[:n])
+        neg_all.append(np.asarray(aux["neg_logit"])[:n])
+        if inductive_edge_mask is not None:
+            ind_mask_all.append(inductive_edge_mask[offset: offset + n])
+        if collect_embeddings:
+            embeds.append(np.asarray(aux["src_embed"])[:n])
+            if "labels" in batch:
+                labels.append(np.asarray(batch["labels"])[:n])
+        offset += n
+    pos = np.concatenate(pos_all)
+    neg = np.concatenate(neg_all)
+    y = np.concatenate([np.ones_like(pos), np.zeros_like(neg)])
+    s = np.concatenate([pos, neg])
+    out = {
+        "ap": average_precision(y, s),
+        "auc": roc_auc(y, s),
+        "state": state,
+    }
+    if inductive_edge_mask is not None:
+        m = np.concatenate(ind_mask_all).astype(bool)
+        if m.any():
+            y_i = np.concatenate([np.ones(m.sum()), np.zeros(m.sum())])
+            s_i = np.concatenate([pos[m], neg[m]])
+            out["ap_inductive"] = average_precision(y_i, s_i)
+        else:
+            out["ap_inductive"] = float("nan")
+    if collect_embeddings:
+        out["embeddings"] = np.concatenate(embeds) if embeds else None
+        out["labels"] = np.concatenate(labels) if labels else None
+    return out
+
+
+def train_classifier_head(
+    embeds: np.ndarray,
+    labels: np.ndarray,
+    n_classes: int,
+    *,
+    seed: int = 0,
+    steps: int = 300,
+    lr: float = 1e-2,
+) -> float:
+    """Dynamic node classification (paper Tab.V): train a small MLP head on
+    frozen interaction-time embeddings, report AUROC on a chronological
+    70/30 split.  Multi-class -> macro one-vs-rest AUROC."""
+    from repro.tig.modules import mlp, mlp_init
+
+    keep = labels >= 0
+    embeds, labels = embeds[keep], labels[keep]
+    n = len(labels)
+    if n < 10 or len(np.unique(labels)) < 2:
+        return float("nan")
+    cut = int(n * 0.7)
+    x_tr = jnp.asarray(embeds[:cut])
+    y_tr = jnp.asarray(labels[:cut])
+    params = mlp_init(jax.random.PRNGKey(seed),
+                      [embeds.shape[1], 64, n_classes])
+    opt = adamw(lr=lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state):
+        def loss_fn(p):
+            logits = mlp(p, x_tr)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y_tr[:, None], 1).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        return params, opt_state, loss
+
+    for _ in range(steps):
+        params, opt_state, _ = step(params, opt_state)
+
+    logits = np.asarray(mlp(params, jnp.asarray(embeds[cut:])))
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    y_te = labels[cut:]
+    if n_classes == 2:
+        return roc_auc(y_te == 1, probs[:, 1])
+    aucs = []
+    for c in range(n_classes):
+        if (y_te == c).any() and (y_te != c).any():
+            aucs.append(roc_auc(y_te == c, probs[:, c]))
+    return float(np.mean(aucs)) if aucs else float("nan")
+
+
+def evaluate_params(
+    g: TemporalGraph,
+    cfg: TIGConfig,
+    params: dict,
+    *,
+    seed: int = 0,
+    eval_node_class: bool = False,
+) -> dict:
+    """Evaluate (PAC-)trained parameters on the standard protocol: replay the
+    train split to build memory (no parameter updates), then score val/test
+    link prediction (+ optional node classification).  This is how the
+    partition-trained rows of Tab.IV/V are produced."""
+    from repro.tig.graph import chronological_split
+
+    rng = np.random.default_rng(seed)
+    train_g, val_g, test_g, inductive_nodes = chronological_split(g)
+    ind = np.zeros(g.num_nodes, dtype=bool)
+    ind[inductive_nodes] = True
+
+    stream, tables = graph_as_stream(g)
+    tables_j = {k: jnp.asarray(v) for k, v in tables.items()}
+    n_tr, n_val = train_g.num_edges, val_g.num_edges
+
+    def sub(lo, hi):
+        return LocalStream(
+            src=stream.src[lo:hi], dst=stream.dst[lo:hi],
+            t=stream.t[lo:hi], eidx=stream.eidx[lo:hi],
+            num_local_nodes=g.num_nodes,
+            labels=None if g.labels is None else g.labels[lo:hi],
+        )
+
+    eval_fn = make_eval_step(cfg)
+    neg_pool = np.unique(stream.dst)
+    sampler = RecentNeighborBuffer(g.num_nodes, cfg.num_neighbors)
+    state = init_state(cfg, g.num_nodes)
+
+    tr_batches = build_batches(sub(0, n_tr), cfg, rng, sampler, neg_pool)
+    res_tr = evaluate_stream(params, cfg, state, tr_batches, tables_j,
+                             eval_fn)
+    val_batches = build_batches(sub(n_tr, n_tr + n_val), cfg, rng,
+                                sampler, neg_pool)
+    res_val = evaluate_stream(params, cfg, res_tr["state"], val_batches,
+                              tables_j, eval_fn)
+    test_stream = sub(n_tr + n_val, g.num_edges)
+    ind_mask = ind[test_stream.src] | ind[test_stream.dst]
+    test_batches = build_batches(test_stream, cfg, rng, sampler, neg_pool)
+    res_test = evaluate_stream(
+        params, cfg, res_val["state"], test_batches, tables_j, eval_fn,
+        inductive_edge_mask=ind_mask, collect_embeddings=eval_node_class)
+
+    out = {
+        "val_ap": res_val["ap"],
+        "test_ap": res_test["ap"],
+        "test_ap_inductive": res_test.get("ap_inductive", float("nan")),
+        "node_auroc": float("nan"),
+    }
+    if eval_node_class and res_test.get("embeddings") is not None \
+            and res_test.get("labels") is not None \
+            and g.labels is not None:
+        n_classes = int(g.labels[g.labels >= 0].max()) + 1
+        out["node_auroc"] = train_classifier_head(
+            res_test["embeddings"], res_test["labels"], max(n_classes, 2))
+    return out
+
+
+@dataclasses.dataclass
+class SingleResult:
+    val_ap: float
+    test_ap: float
+    test_ap_inductive: float
+    node_auroc: float
+    epoch_seconds: list[float]
+    losses: list[float]
+    params: dict
+    state: dict
+    cfg: TIGConfig
+
+
+def train_single(
+    g: TemporalGraph,
+    cfg: TIGConfig,
+    *,
+    epochs: int = 3,
+    lr: float = 1e-3,
+    seed: int = 0,
+    eval_node_class: bool = False,
+) -> SingleResult:
+    """The paper's single-device baseline trainer: chronological 70/15/15
+    split, memory reset per epoch, val/test continue the epoch-end memory."""
+    from repro.tig.graph import chronological_split
+
+    rng = np.random.default_rng(seed)
+    train_g, val_g, test_g, inductive_nodes = chronological_split(g)
+    ind = np.zeros(g.num_nodes, dtype=bool)
+    ind[inductive_nodes] = True
+
+    stream, tables = graph_as_stream(g)
+    tables_j = {k: jnp.asarray(v) for k, v in tables.items()}
+    n_tr = train_g.num_edges
+    n_val = val_g.num_edges
+
+    def sub(lo, hi, g_sub):
+        return LocalStream(
+            src=stream.src[lo:hi], dst=stream.dst[lo:hi],
+            t=stream.t[lo:hi], eidx=stream.eidx[lo:hi],
+            num_local_nodes=g.num_nodes,
+            labels=None if g.labels is None else g.labels[lo:hi],
+        )
+
+    tr_stream = sub(0, n_tr, train_g)
+    val_stream = sub(n_tr, n_tr + n_val, val_g)
+    test_stream = sub(n_tr + n_val, g.num_edges, test_g)
+
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw(lr=lr, max_grad_norm=1.0)
+    opt_state = opt.init(params)
+    step_fn = make_train_step(cfg, opt)
+    eval_fn = make_eval_step(cfg)
+
+    neg_pool = np.unique(stream.dst)
+    epoch_secs, losses = [], []
+    best = {"val_ap": -1.0}
+    state = init_state(cfg, g.num_nodes)
+
+    for ep in range(epochs):
+        t0 = time.perf_counter()
+        sampler = RecentNeighborBuffer(g.num_nodes, cfg.num_neighbors)
+        batches = build_batches(tr_stream, cfg, rng, sampler, neg_pool)
+        state = init_state(cfg, g.num_nodes)  # Alg.2: reset at cycle start
+        params, opt_state, state, loss = train_epoch(
+            params, opt_state, state, batches, tables_j, step_fn)
+        epoch_secs.append(time.perf_counter() - t0)
+        losses.append(loss)
+
+        # validation continues from epoch-end memory + neighbor index
+        s_val = sampler.copy()
+        val_batches = build_batches(val_stream, cfg, rng, s_val, neg_pool)
+        res_val = evaluate_stream(params, cfg, state, val_batches,
+                                  tables_j, eval_fn)
+        if res_val["ap"] > best["val_ap"]:
+            ind_mask = (ind[test_stream.src] | ind[test_stream.dst])
+            test_batches = build_batches(
+                test_stream, cfg, rng, s_val.copy(), neg_pool)
+            res_test = evaluate_stream(
+                params, cfg, res_val["state"], test_batches, tables_j,
+                eval_fn, inductive_edge_mask=ind_mask,
+                collect_embeddings=eval_node_class,
+            )
+            best = {
+                "val_ap": res_val["ap"],
+                "test_ap": res_test["ap"],
+                "test_ap_inductive": res_test.get("ap_inductive",
+                                                  float("nan")),
+                "test_res": res_test,
+            }
+
+    node_auroc = float("nan")
+    if eval_node_class and g.labels is not None:
+        res_test = best["test_res"]
+        if res_test.get("embeddings") is not None \
+                and res_test.get("labels") is not None:
+            n_classes = int(g.labels[g.labels >= 0].max()) + 1
+            node_auroc = train_classifier_head(
+                res_test["embeddings"], res_test["labels"],
+                max(n_classes, 2))
+
+    return SingleResult(
+        val_ap=best["val_ap"],
+        test_ap=best["test_ap"],
+        test_ap_inductive=best["test_ap_inductive"],
+        node_auroc=node_auroc,
+        epoch_seconds=epoch_secs,
+        losses=losses,
+        params=params,
+        state=state,
+        cfg=cfg,
+    )

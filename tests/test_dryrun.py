@@ -1,0 +1,84 @@
+"""Dry-run machinery tests: input_specs coverage + one real 512-device
+lower+compile in a subprocess (the full sweep is
+``python -m repro.launch.dryrun --all --both-meshes``)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_long_500k_policy():
+    """long_500k runs iff the arch is sub-quadratic (DESIGN.md §4)."""
+    expected = {"rwkv6-1.6b", "hymba-1.5b", "starcoder2-3b"}
+    for arch in list_archs():
+        if arch == "speed-tig":
+            continue
+        cfg = get_config(arch)
+        assert cfg.sub_quadratic == (arch in expected), arch
+
+
+def test_input_specs_all_combos():
+    """input_specs must produce a complete batch for every runnable
+    (arch x shape) combination without touching devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    script = textwrap.dedent("""
+        from repro.launch.dryrun import input_specs, LONG_OK
+        from repro.configs import INPUT_SHAPES, get_config, list_archs
+        n = 0
+        for arch in list_archs():
+            if arch == "speed-tig":
+                continue
+            cfg = get_config(arch)
+            for shape in INPUT_SHAPES:
+                if shape == "long_500k" and arch not in LONG_OK:
+                    continue
+                batch = input_specs(arch, shape)
+                kind = INPUT_SHAPES[shape].kind
+                if kind in ("train", "prefill"):
+                    assert "tokens" in batch and (
+                        kind == "prefill" or "targets" in batch)
+                    if cfg.frontend == "vision":
+                        assert "patches" in batch and "positions3" in batch
+                    if cfg.enc_dec:
+                        assert "frames" in batch
+                else:
+                    assert set(batch) == {"token", "pos"}
+                n += 1
+        assert n == 33, n
+        print("SPECS_OK", n)
+    """)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=300,
+                          cwd=REPO, env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SPECS_OK 33" in proc.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_one_combo_512_devices():
+    """End-to-end: lower + compile one real combination on the 512-chip
+    multi-pod mesh (subprocess so the forced device count stays local)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    script = textwrap.dedent("""
+        from repro.launch.dryrun import dryrun_one
+        r = dryrun_one("seamless-m4t-medium", "decode_32k",
+                       multi_pod=True, save=False, verbose=False)
+        assert r["status"] == "ok", r
+        assert r["chips"] == 512
+        assert r["hlo_flops"] > 0 and r["collective_bytes"] >= 0
+        print("DRYRUN_OK", r["dominant"])
+    """)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900,
+                          cwd=REPO, env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "DRYRUN_OK" in proc.stdout

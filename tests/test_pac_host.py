@@ -1,0 +1,166 @@
+"""Tests for PAC host-side logic: shuffle-combine, cycle schedule, memory sync."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_subgraph,
+    cycle_schedule,
+    derived_speedup,
+    make_local_indices,
+    sep_partition,
+    shuffle_combine,
+    sync_shared_memory,
+)
+
+
+def graph(seed=0, n=200, e=2000):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    t = np.sort(rng.uniform(0, 1, e))
+    return src, dst, t, n
+
+
+# ------------------------------------------------------------ shuffle-combine
+
+def test_shuffle_combine_partition_of_parts():
+    rng = np.random.default_rng(0)
+    parts = [np.array([i * 10 + j for j in range(10)]) for i in range(8)]
+    combined = shuffle_combine(parts, 4, rng)
+    assert len(combined) == 4
+    allnodes = np.sort(np.concatenate(combined))
+    np.testing.assert_array_equal(allnodes, np.arange(80))
+
+
+def test_shuffle_combine_requires_divisibility():
+    with pytest.raises(ValueError):
+        shuffle_combine([np.arange(3)] * 7, 4, np.random.default_rng(0))
+
+
+def test_shuffle_combine_recovers_deleted_edges():
+    """Edges dropped between small parts reappear when those parts merge."""
+    src, dst, t, n = graph()
+    res = sep_partition(src, dst, t, n, 8, k=0.0)
+    kept_small = set(np.nonzero(res.edge_part >= 0)[0])
+    node_lists = res.node_lists()
+    rng = np.random.default_rng(1)
+    recovered_any = False
+    for _ in range(5):
+        combined = shuffle_combine(node_lists, 4, rng)
+        kept_comb = set()
+        for nodes in combined:
+            kept_comb |= set(build_subgraph(src, dst, nodes, n))
+        # merging can only ADD edges relative to the 8-way split
+        assert kept_small <= kept_comb
+        if len(kept_comb) > len(kept_small):
+            recovered_any = True
+    assert recovered_any
+
+
+def test_build_subgraph_both_endpoints():
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([1, 2, 3, 0])
+    nodes = np.array([0, 1, 2])
+    idx = build_subgraph(src, dst, nodes, 4)
+    np.testing.assert_array_equal(idx, [0, 1])
+
+
+# ------------------------------------------------------------ local indices
+
+def test_make_local_indices_padding_and_roundtrip():
+    lists = [np.array([5, 1, 9]), np.array([0, 2, 3, 7, 8])]
+    idx = make_local_indices(lists, 10)
+    assert all(li.capacity == 5 for li in idx)
+    assert idx[0].num_real == 3
+    # globals sorted, padded with -1
+    np.testing.assert_array_equal(idx[0].globals_, [1, 5, 9, -1, -1])
+    # roundtrip: to_local of member nodes maps into globals_
+    for li in idx:
+        real = li.globals_[: li.num_real]
+        np.testing.assert_array_equal(li.globals_[li.to_local[real]], real)
+    # non-members are -1
+    assert idx[0].to_local[0] == -1
+
+
+# ------------------------------------------------------------ cycle schedule
+
+def test_cycle_schedule_wraparound():
+    sched = cycle_schedule([100, 40, 400, 10], batch_size=10)
+    np.testing.assert_array_equal(sched.batches, [10, 4, 40, 1])
+    assert sched.steps_per_epoch == 40
+    # device 1 wraps: step 4 re-reads its batch 0
+    np.testing.assert_array_equal(sched.batch_index(4), [4, 0, 4, 0])
+    # cycle ends exactly at multiples of its batch count
+    ends = np.stack([sched.is_cycle_end(s) for s in range(40)])
+    np.testing.assert_array_equal(ends.sum(0), [4, 10, 1, 40])
+    # final step ends every device's cycle only if divisible
+    np.testing.assert_array_equal(sched.is_cycle_end(39), [True] * 4)
+
+
+def test_cycle_schedule_every_batch_visited():
+    sched = cycle_schedule([35, 17], batch_size=5)
+    steps = sched.steps_per_epoch
+    for dev, nb in enumerate(sched.batches):
+        seen = {int(sched.batch_index(s)[dev]) for s in range(steps)}
+        assert seen == set(range(nb))  # Alg.2: at least one full traversal
+
+
+def test_derived_speedup():
+    assert derived_speedup([100, 100, 100, 100]) == pytest.approx(4.0)
+    assert derived_speedup([400, 0, 0, 0]) == pytest.approx(1.0)
+    assert derived_speedup([200, 100, 50, 50]) == pytest.approx(2.0)
+
+
+# ------------------------------------------------------------ memory sync
+
+def test_sync_shared_memory_latest():
+    n_dev, cap, d, s = 3, 6, 4, 2
+    rng = np.random.default_rng(0)
+    mem = rng.normal(size=(n_dev, cap, d))
+    last = np.zeros((n_dev, cap))
+    shared_local = np.array([[0, 1], [2, 3], [4, 5]])
+    # device 1 has the freshest copy of shared node 0; device 2 of node 1
+    last[1, 2] = 10.0
+    last[2, 5] = 7.0
+    out = sync_shared_memory(mem, last, shared_local, mode="latest")
+    for k in range(n_dev):
+        np.testing.assert_allclose(out[k, shared_local[k, 0]], mem[1, 2])
+        np.testing.assert_allclose(out[k, shared_local[k, 1]], mem[2, 5])
+    # non-shared rows untouched
+    untouched = np.setdiff1d(np.arange(cap), shared_local[0])
+    np.testing.assert_allclose(out[0, untouched], mem[0, untouched])
+
+
+def test_sync_shared_memory_mean():
+    n_dev, cap, d = 2, 3, 2
+    mem = np.arange(n_dev * cap * d, dtype=float).reshape(n_dev, cap, d)
+    last = np.zeros((n_dev, cap))
+    shared_local = np.array([[1], [0]])
+    out = sync_shared_memory(mem, last, shared_local, mode="mean")
+    expect = (mem[0, 1] + mem[1, 0]) / 2
+    np.testing.assert_allclose(out[0, 1], expect)
+    np.testing.assert_allclose(out[1, 0], expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n_dev=st.integers(2, 6),
+       s=st.integers(0, 4))
+def test_sync_latest_idempotent_and_agreeing(seed, n_dev, s):
+    rng = np.random.default_rng(seed)
+    cap, d = max(s, 1) + 3, 5
+    mem = rng.normal(size=(n_dev, cap, d))
+    last = rng.uniform(size=(n_dev, cap))
+    shared_local = np.stack(
+        [rng.choice(cap, size=s, replace=False) for _ in range(n_dev)]
+    ).astype(np.int64) if s else np.zeros((n_dev, 0), dtype=np.int64)
+    out = sync_shared_memory(mem, last, shared_local, mode="latest")
+    # all devices agree on shared rows
+    for si in range(s):
+        ref = out[0, shared_local[0, si]]
+        for k in range(1, n_dev):
+            np.testing.assert_allclose(out[k, shared_local[k, si]], ref)
+    # idempotent (same last-update table)
+    out2 = sync_shared_memory(out, last, shared_local, mode="latest")
+    np.testing.assert_allclose(out2, out)

@@ -1,0 +1,143 @@
+"""Tests for the loop-aware HLO cost analyzer + roofline machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import MODEL_FLOPS, parse_collectives
+from repro.roofline.hlo_cost import analyze_hlo_text
+
+
+def compile_fn(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_plain_matmul_flops_exact():
+    m, k, n = 256, 512, 128
+    c = compile_fn(lambda a, b: a @ b,
+                   jax.ShapeDtypeStruct((m, k), jnp.float32),
+                   jax.ShapeDtypeStruct((k, n), jnp.float32))
+    hc = analyze_hlo_text(c.as_text())
+    assert hc.flops == 2 * m * k * n
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    m, k = 128, 256
+
+    def scanned(a, b):
+        def body(x, _):
+            return jnp.tanh(x @ b), None
+        y, _ = jax.lax.scan(body, a, None, length=10)
+        return y
+
+    c = compile_fn(scanned,
+                   jax.ShapeDtypeStruct((m, k), jnp.float32),
+                   jax.ShapeDtypeStruct((k, k), jnp.float32))
+    hc = analyze_hlo_text(c.as_text())
+    assert hc.flops == 10 * 2 * m * k * k
+
+
+def test_nested_scan_flops():
+    m, k = 64, 128
+
+    def nested(a, b):
+        def inner(x, _):
+            return x @ b, None
+
+        def outer(x, _):
+            y, _ = jax.lax.scan(inner, x, None, length=5)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, a, None, length=4)
+        return y
+
+    c = compile_fn(nested,
+                   jax.ShapeDtypeStruct((m, k), jnp.float32),
+                   jax.ShapeDtypeStruct((k, k), jnp.float32))
+    hc = analyze_hlo_text(c.as_text())
+    assert hc.flops == 20 * 2 * m * k * k
+
+
+def test_batched_dot_flops():
+    b, m, k, n = 4, 32, 64, 16
+    c = compile_fn(lambda x, y: jnp.einsum("bmk,bkn->bmn", x, y),
+                   jax.ShapeDtypeStruct((b, m, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k, n), jnp.float32))
+    hc = analyze_hlo_text(c.as_text())
+    assert hc.flops == 2 * b * m * k * n
+
+
+def test_grad_roughly_triples_flops():
+    m = 128
+
+    def f(w, x):
+        return jnp.sum(jnp.tanh(x @ w) ** 2)
+
+    specs = (jax.ShapeDtypeStruct((m, m), jnp.float32),
+             jax.ShapeDtypeStruct((m, m), jnp.float32))
+    fwd = analyze_hlo_text(compile_fn(f, *specs).as_text())
+    bwd = analyze_hlo_text(compile_fn(jax.grad(f), *specs).as_text())
+    assert 2.0 <= bwd.flops / fwd.flops <= 4.0
+
+
+def test_bytes_nonzero_and_sane():
+    m = 256
+    c = compile_fn(lambda a: a + 1.0,
+                   jax.ShapeDtypeStruct((m, m), jnp.float32))
+    hc = analyze_hlo_text(c.as_text())
+    # read + write of a 256x256 f32
+    assert hc.bytes >= 2 * m * m * 4
+    assert hc.bytes <= 8 * m * m * 4
+
+
+def test_collectives_counted_in_sharded_program():
+    """psum over 4 forced host devices must show up as all-reduce bytes."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.roofline.hlo_cost import analyze_hlo_text
+        mesh = jax.make_mesh((4,), ("d",))
+        def f(x):
+            return jax.lax.with_sharding_constraint(
+                jnp.sum(x, axis=0, keepdims=True), P())
+        sh = NamedSharding(mesh, P("d", None))
+        with jax.set_mesh(mesh):
+            c = jax.jit(f, in_shardings=(sh,),
+                        out_shardings=NamedSharding(mesh, P())).lower(
+                jax.ShapeDtypeStruct((8, 1024), jnp.float32)).compile()
+        hc = analyze_hlo_text(c.as_text())
+        assert hc.collective_bytes > 0, hc
+        print("COLL_OK", hc.collective_bytes)
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=300,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))), env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "COLL_OK" in proc.stdout
+
+
+def test_model_flops_formula():
+    assert MODEL_FLOPS(1e9, 1e6, "train") == 6e15
+    assert MODEL_FLOPS(1e9, 1e6, "infer") == 2e15
+
+
+def test_parse_collectives_regex():
+    hlo = """
+  %ag = f32[128,256]{1,0} all-gather(%x), dimensions={0}
+  %ar = bf16[64]{0} all-reduce(%y), to_apply=%sum
+  %rs = f32[32,32]{1,0} reduce-scatter(%z), dimensions={0}
+"""
+    st = parse_collectives(hlo)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 1
+    assert st.bytes_by_kind["all-gather"] == 128 * 256 * 4
+    assert st.bytes_by_kind["all-reduce"] == 64 * 2 * 2  # doubled

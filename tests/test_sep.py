@@ -1,0 +1,254 @@
+"""Unit + property tests for the SEP streaming partitioner (Alg.1, Thm.1/2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    degree_centrality,
+    edge_cut_fraction,
+    greedy_partition,
+    hdrf_partition,
+    kl_partition,
+    ldg_partition,
+    partition_stats,
+    random_partition,
+    replication_factor,
+    sep_partition,
+    temporal_centrality,
+    thm1_rf_bound,
+    thm2_ec_bound,
+    top_k_hubs,
+)
+from repro.core.metrics import fit_power_law_alpha
+
+
+def make_graph(seed=0, num_nodes=400, num_edges=3000, zipf=1.7):
+    """Bipartite power-law temporal interaction graph where every node has
+    at least one edge (so RF denominators match the theorems)."""
+    rng = np.random.default_rng(seed)
+    half = num_nodes // 2
+    src = rng.zipf(zipf, num_edges) % half
+    dst = half + (rng.zipf(zipf, num_edges) % (num_nodes - half))
+    # guarantee every node appears at least once
+    all_src = np.arange(half)
+    all_dst = half + np.arange(num_nodes - half)
+    src = np.concatenate([all_src, src])
+    dst = np.concatenate([rng.integers(half, num_nodes, half), dst])
+    src = np.concatenate([src, rng.integers(0, half, num_nodes - half)])
+    dst = np.concatenate([dst, all_dst])
+    e = len(src)
+    t = np.sort(rng.uniform(0.0, 1e6, e))
+    perm = rng.permutation(e)
+    src, dst = src[perm], dst[perm]  # decouple id from time order
+    return src.astype(np.int64), dst.astype(np.int64), t, num_nodes
+
+
+# ---------------------------------------------------------------- centrality
+
+def test_temporal_centrality_recency_weighting():
+    # node 0 has one OLD edge, node 1 one RECENT edge, both degree 1.
+    src = np.array([0, 1])
+    dst = np.array([2, 3])
+    t = np.array([0.0, 100.0])
+    c = temporal_centrality(src, dst, t, 4, beta=0.9)
+    assert c[1] > c[0]
+    assert c[3] > c[2]
+
+
+def test_degree_vs_temporal_centrality_disagree():
+    # high-degree-but-stale node loses to low-degree-but-fresh under decay.
+    src = np.array([0, 0, 0, 0, 1])
+    dst = np.array([2, 3, 4, 5, 6])
+    t = np.array([0.0, 1.0, 2.0, 3.0, 1000.0])
+    deg = degree_centrality(src, dst, 7)
+    tc = temporal_centrality(src, dst, t, 7, beta=0.99,
+                             normalize_time=False)
+    assert deg[0] > deg[1]
+    assert tc[1] > tc[0]
+
+
+def test_top_k_hubs_sizes():
+    c = np.arange(100, dtype=float)
+    assert top_k_hubs(c, 0.0).sum() == 0
+    assert top_k_hubs(c, 0.05).sum() == 5
+    assert top_k_hubs(c, 1.0).sum() == 100
+    # the hubs really are the largest
+    assert top_k_hubs(c, 0.05)[95:].all()
+
+
+# ---------------------------------------------------------------- SEP Alg.1
+
+@pytest.mark.parametrize("k", [0.0, 0.02, 0.1])
+@pytest.mark.parametrize("num_parts", [2, 4, 8])
+def test_sep_invariants(k, num_parts):
+    src, dst, t, n = make_graph()
+    res = sep_partition(src, dst, t, n, num_parts, k=k)
+    pop = np.array([int(m).bit_count() for m in res.node_masks])
+
+    # every node with an edge is placed somewhere
+    assert (pop > 0).all()
+
+    # non-hubs never replicate (Thm.1 construction)
+    nonhub = ~res.hubs
+    assert (pop[nonhub] <= 1).all()
+
+    # shared nodes are exactly the hub subset that replicated, and are
+    # broadcast to all partitions (Alg.1 line 20)
+    assert set(res.shared_nodes) <= set(np.nonzero(res.hubs)[0])
+    if len(res.shared_nodes):
+        assert (pop[res.shared_nodes] == num_parts).all()
+
+    # kept edges have both endpoints in the assigned partition
+    kept = res.edge_part >= 0
+    p = res.edge_part[kept].astype(np.uint64)
+    bit = np.uint64(1)
+    assert ((res.node_masks[src[kept]] >> p) & bit).all()
+    assert ((res.node_masks[dst[kept]] >> p) & bit).all()
+
+    # k == 0: no replication at all
+    if k == 0.0:
+        assert len(res.shared_nodes) == 0
+        assert replication_factor(res) == 1.0
+
+
+@pytest.mark.parametrize("num_parts", [2, 4, 8])
+def test_thm1_rf_bound(num_parts):
+    src, dst, t, n = make_graph()
+    for k in (0.0, 0.05, 0.2):
+        res = sep_partition(src, dst, t, n, num_parts, k=k)
+        # ceil() in hub count gives a hair of slack over the continuous bound
+        bound = thm1_rf_bound(np.ceil(k * n) / n, num_parts)
+        assert replication_factor(res, denominator="all") <= bound + 1e-9
+
+
+def test_edge_cut_only_from_case3():
+    # with k=1 (all hubs) there are no Case-3 discards -> zero edge cut
+    src, dst, t, n = make_graph()
+    res = sep_partition(src, dst, t, n, 4, k=1.0)
+    assert edge_cut_fraction(res) == 0.0
+
+
+def test_more_hubs_less_cut():
+    src, dst, t, n = make_graph(num_edges=5000)
+    cuts = [
+        edge_cut_fraction(sep_partition(src, dst, t, n, 4, k=k))
+        for k in (0.0, 0.05, 0.2, 1.0)
+    ]
+    assert cuts[0] >= cuts[-1]
+    assert cuts[-1] == 0.0
+
+
+def test_load_balance_edges():
+    src, dst, t, n = make_graph(num_edges=6000)
+    res = sep_partition(src, dst, t, n, 4, k=0.05)
+    counts = res.edge_counts()
+    assert counts.max() <= 1.3 * max(counts.min(), 1)
+
+
+def test_thm2_ec_bound_degree_centrality():
+    # Thm.2 is stated for degree centrality on a power-law graph.
+    src, dst, t, n = make_graph(num_edges=4000, zipf=2.2)
+    deg = degree_centrality(src, dst, n)
+    alpha = fit_power_law_alpha(deg)
+    m = max(float(deg[deg > 0].min()), 1.0)
+    for k in (0.05, 0.2):
+        res = sep_partition(
+            src, dst, t, n, 4, k=k, centrality=deg
+        )
+        bound = thm2_ec_bound(n, len(src), k, m, alpha)
+        assert edge_cut_fraction(res) <= min(bound, 1.0) + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    num_parts=st.sampled_from([2, 3, 4, 8]),
+    k=st.floats(0.0, 1.0),
+    n_edges=st.integers(50, 400),
+)
+def test_sep_property_random_graphs(seed, num_parts, k, n_edges):
+    rng = np.random.default_rng(seed)
+    n = 60
+    src = rng.integers(0, n, n_edges)
+    dst = rng.integers(0, n, n_edges)
+    t = np.sort(rng.uniform(0, 1.0, n_edges))
+    res = sep_partition(src, dst, t, n, num_parts, k=k)
+    pop = np.array([int(m).bit_count() for m in res.node_masks])
+    touched = np.zeros(n, dtype=bool)
+    touched[src] = True
+    touched[dst] = True
+    # placed iff touched
+    assert ((pop > 0) == touched).all()
+    # non-hub single placement
+    assert (pop[~res.hubs] <= 1).all()
+    # edge containment
+    kept = res.edge_part >= 0
+    p = res.edge_part[kept].astype(np.uint64)
+    assert ((res.node_masks[src[kept]] >> p) & np.uint64(1)).all()
+    assert ((res.node_masks[dst[kept]] >> p) & np.uint64(1)).all()
+    # partition ids within range
+    assert res.edge_part.max() < num_parts
+    # every partition bit within range
+    assert (res.node_masks < (np.uint64(1) << np.uint64(num_parts))).all()
+
+
+# ------------------------------------------------------------- baselines
+
+def test_hdrf_no_discards_and_balance():
+    src, dst, t, n = make_graph()
+    res = hdrf_partition(src, dst, n, 4)
+    assert edge_cut_fraction(res) == 0.0
+    counts = res.edge_counts()
+    assert counts.max() <= 1.2 * counts.min() + 8
+
+
+def test_hdrf_equals_sep_topk1_structure():
+    """Paper §III-B: unrestricted top_k degenerates SEP to HDRF."""
+    src, dst, t, n = make_graph(num_edges=1500)
+    deg = degree_centrality(src, dst, n)
+    a = sep_partition(src, dst, t, n, 4, k=1.0, centrality=deg,
+                      shared_to_all=False)
+    b = hdrf_partition(src, dst, n, 4)
+    np.testing.assert_array_equal(a.edge_part, b.edge_part)
+
+
+def test_greedy_runs():
+    src, dst, t, n = make_graph(num_edges=1000)
+    res = greedy_partition(src, dst, n, 4)
+    assert edge_cut_fraction(res) == 0.0
+
+
+def test_random_partition_balance():
+    src, dst, t, n = make_graph(num_edges=4000)
+    res = random_partition(src, dst, n, 4, seed=1)
+    counts = res.edge_counts()
+    assert counts.sum() == len(src)
+    assert counts.std() < 0.1 * counts.mean()
+
+
+def test_ldg_edge_cut_partition():
+    src, dst, t, n = make_graph(num_edges=1500)
+    res = ldg_partition(src, dst, n, 4)
+    # edge-cut method: every node in exactly one partition
+    pop = np.array([int(m).bit_count() for m in res.node_masks])
+    assert (pop == 1).all()
+    assert replication_factor(res) == 1.0
+
+
+def test_kl_partition_node_balanced():
+    src, dst, t, n = make_graph(num_edges=800, num_nodes=120)
+    res = kl_partition(src, dst, n, 4)
+    counts = res.node_counts()
+    assert counts.max() - counts.min() <= 2
+    with pytest.raises(ValueError):
+        kl_partition(src, dst, n, 3)
+
+
+def test_partition_stats_fields():
+    src, dst, t, n = make_graph(num_edges=600)
+    s = partition_stats(sep_partition(src, dst, t, n, 4, k=0.05))
+    assert s.num_parts == 4
+    assert 0 <= s.edge_cut <= 1
+    assert s.replication_factor >= 1.0
+    assert s.elapsed_s > 0
