@@ -12,6 +12,7 @@ import time
 import traceback
 
 MODULES = [
+    "engine_speedup",
     "table3_efficiency",
     "table4_linkpred",
     "table5_nodeclass",

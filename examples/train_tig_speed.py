@@ -38,6 +38,10 @@ def main():
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--parts", type=int, default=8)
     ap.add_argument("--topk", type=float, default=0.01)
+    ap.add_argument("--pallas", action="store_true",
+                    help="route attention/GRU inside the scanned epoch "
+                         "through the Pallas kernels (TPU; on CPU set "
+                         "REPRO_KERNEL_BACKEND=interpret to validate)")
     args = ap.parse_args()
 
     scale = 1.0 if args.big else 0.25
@@ -56,7 +60,8 @@ def main():
           f"edge std {stats.edge_std:.0f}")
 
     cfg = TIGConfig(flavor="tgn", dim=64, dim_time=32, dim_edge=g.dim_edge,
-                    dim_node=g.dim_node, num_neighbors=10, batch_size=200)
+                    dim_node=g.dim_node, num_neighbors=10, batch_size=200,
+                    use_pallas=args.pallas)
     res = pac_train(train_g, part, cfg, num_devices=args.devices,
                     epochs=args.epochs, lr=1e-3, shuffle_parts=True)
     steps = sum(l.shape[-1] for l in res.losses)

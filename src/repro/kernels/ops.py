@@ -8,12 +8,16 @@ Each op picks its execution path:
                                models use on CPU and in dry-runs; on TPU
                                deployments flip the default to "pallas").
 
-``default_backend()`` resolves "auto": pallas on TPU, xla elsewhere.
+``default_backend()`` resolves "auto": pallas on TPU, xla elsewhere.  The
+``REPRO_KERNEL_BACKEND`` environment variable overrides the "auto"
+resolution (e.g. ``REPRO_KERNEL_BACKEND=interpret`` exercises the Pallas
+kernel bodies on CPU without touching any config).
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 
@@ -37,27 +41,79 @@ def default_backend() -> str:
 
 
 def _resolve(backend: str | None) -> str:
-    return backend if backend not in (None, "auto") else default_backend()
+    if backend not in (None, "auto"):
+        return backend
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        if env not in ("xla", "pallas", "interpret", "scan"):
+            raise ValueError(
+                f"REPRO_KERNEL_BACKEND={env!r}: expected one of "
+                "xla / pallas / interpret / scan")
+        return env
+    return default_backend()
+
+
+# The TIG training scan differentiates through the fused kernels, but raw
+# ``pallas_call`` has no transpose rule.  Standard fix: custom VJP — fused
+# Pallas forward, pure-jnp oracle (ref.py) recomputation backward.  The
+# oracles are exact (the kernels are validated against them), so gradients
+# are identical to the XLA path.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _gru_fused(x, h, wx, wh, bx, bh, interpret):
+    return _gru_pallas(x, h, wx, wh, bx, bh, interpret=interpret)
+
+
+def _gru_fused_fwd(x, h, wx, wh, bx, bh, interpret):
+    return _gru_fused(x, h, wx, wh, bx, bh, interpret), (x, h, wx, wh, bx, bh)
+
+
+def _gru_fused_bwd(interpret, res, g):
+    _, vjp = jax.vjp(ref.gru_ref, *res)
+    return vjp(g)
+
+
+_gru_fused.defvjp(_gru_fused_fwd, _gru_fused_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _tattn_fused(q, k, v, mask, interpret):
+    return _tattn_pallas(q, k, v, mask, interpret=interpret)
+
+
+def _tattn_fused_fwd(q, k, v, mask, interpret):
+    return _tattn_fused(q, k, v, mask, interpret), (q, k, v, mask)
+
+
+def _tattn_fused_bwd(interpret, res, g):
+    q, k, v, mask = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.temporal_attention_ref(q_, k_, v_, mask),
+        q, k, v)
+    return (*vjp(g), None)
+
+
+_tattn_fused.defvjp(_tattn_fused_fwd, _tattn_fused_bwd)
 
 
 def gru(x, h, wx, wh, bx, bh, *, backend: str | None = None):
     b = _resolve(backend)
-    if b == "xla":
+    if b in ("xla", "scan"):   # "scan" only exists for rwkv6 -> oracle here
         return ref.gru_ref(x, h, wx, wh, bx, bh)
-    return _gru_pallas(x, h, wx, wh, bx, bh, interpret=(b == "interpret"))
+    return _gru_fused(x, h, wx, wh, bx, bh, b == "interpret")
 
 
 def temporal_attention(q, k, v, mask, *, backend: str | None = None):
     b = _resolve(backend)
-    if b == "xla":
+    if b in ("xla", "scan"):
         return ref.temporal_attention_ref(q, k, v, mask)
-    return _tattn_pallas(q, k, v, mask, interpret=(b == "interpret"))
+    return _tattn_fused(q, k, v, mask, b == "interpret")
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,
                     backend: str | None = None, block_q=128, block_k=128):
     b = _resolve(backend)
-    if b == "xla":
+    if b in ("xla", "scan"):
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     return _fa_pallas(q, k, v, causal=causal, window=window,
                       block_q=block_q, block_k=block_k,

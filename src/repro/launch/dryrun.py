@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import INPUT_SHAPES, get_config, list_archs
 from repro.launch.mesh import make_production_mesh, make_tig_mesh
 from repro.models import model as M
@@ -156,7 +157,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     sharded_moe = cfg.is_moe and shape.kind in ("train", "prefill") \
         and not os.environ.get("REPRO_MOE_PJIT")
-    with jax.set_mesh(mesh), \
+    with compat.set_mesh(mesh), \
             M.activation_batch_axes(b_axes, sharded_moe=sharded_moe):
         if shape.kind == "train":
             params_shape = jax.eval_shape(

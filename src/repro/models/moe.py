@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.layers import _act, linear_init
 
 __all__ = ["moe_init", "moe_apply"]
@@ -168,10 +169,9 @@ def moe_apply_sharded(p: dict, x: jnp.ndarray, *, top_k: int, act: str,
     tok = P(token_axes, None)
     wspec = P(expert_axis, None, None)
     wg = p.get("wg", p["wi"][:, :0, :0])   # dummy when ungated
-    out = jax.shard_map(
+    out = compat.shard_map(
         body,
         in_specs=(P(None, None), wspec, wspec, wspec, tok),
         out_specs=(tok, P()),
-        check_vma=False,
     )(p["router"]["w"], p["wi"], p["wo"], wg, x)
     return out

@@ -1,26 +1,34 @@
 """Host-side batch construction for TIG training (fixed-shape, jit-ready).
 
-Batches are built chronologically.  For every batch we first *sample* the
-temporal neighbors of (src, dst, neg) from the ring-buffer index — neighbors
-strictly precede the batch — and only then *update* the index with the
-batch's edges, so no future information leaks (paper Challenge 1).
+Batches are built chronologically.  Temporal neighbors of (src, dst, neg)
+come from the vectorized ``ChronoNeighborIndex`` built once per stream:
+every batch samples neighbors *as of its own batch boundary*, so neighbors
+strictly precede the batch and no future information leaks (paper
+Challenge 1).  The whole plan — padding, negatives, neighbor gathers — is
+pure numpy array work; there is no per-edge interpreter loop anywhere.
 
 All ids in produced batches are LOCAL (device) ids; -1 marks padding.  The
 edge-feature table handed to the device gets one extra zero row at index E
 so -1 neighbor edge indices can be remapped on device.
+
+``build_batch_program`` emits the batches pre-stacked as (steps, ...) arrays
+— the layout ``repro.tig.engine``'s scanned epoch consumes directly.
+``build_batches`` unstacks the same plan into a list of per-batch dicts for
+callers that still step batch by batch.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.tig.models import TIGConfig
-from repro.tig.sampler import RecentNeighborBuffer
+from repro.tig.sampler import ChronoNeighborIndex, NeighborSnapshot
 
-__all__ = ["LocalStream", "build_batches", "stack_batches", "make_tables"]
+__all__ = ["LocalStream", "build_batch_program", "build_batches",
+           "stack_batches", "unstack_batches", "make_tables"]
 
 
 @dataclasses.dataclass
@@ -51,74 +59,99 @@ def make_tables(edge_feat: np.ndarray, node_feat: np.ndarray) -> dict:
     return {"efeat": e, "nfeat": n}
 
 
+def _padded(x: np.ndarray, steps: int, b: int, fill) -> np.ndarray:
+    """(E, ...) -> (steps, b, ...) chronological grid, tail ``fill``-padded."""
+    out = np.full((steps * b,) + x.shape[1:], fill, dtype=x.dtype)
+    out[: len(x)] = x
+    return out.reshape((steps, b) + x.shape[1:])
+
+
+def build_batch_program(
+    stream: LocalStream,
+    cfg: TIGConfig,
+    rng: np.random.Generator,
+    history: Optional[NeighborSnapshot] = None,
+    neg_pool: Optional[np.ndarray] = None,
+) -> tuple[dict, NeighborSnapshot]:
+    """Fully pre-staged epoch plan: a (steps, ...) batch pytree.
+
+    Args:
+      history: neighbor index state carried over from an earlier stream
+        (e.g. train -> val continuation); defaults to an empty history.
+      neg_pool: candidate local ids for negative sampling (defaults to the
+        stream's destination nodes — the JODIE/TGN convention).
+
+    Returns ``(batches, final_history)`` where ``batches`` maps each
+    ``models.step_loss`` key to a (steps, batch, ...) array and
+    ``final_history`` is the neighbor index state after the whole stream.
+    """
+    b, k = cfg.batch_size, cfg.num_neighbors
+    if neg_pool is None or len(neg_pool) == 0:
+        neg_pool = np.unique(stream.dst)
+    n_edges = stream.num_edges
+    steps = max(1, -(-n_edges // b))
+
+    index = ChronoNeighborIndex(
+        stream.src, stream.dst, stream.t, stream.eidx,
+        stream.num_local_nodes, k, b, history=history)
+
+    src = _padded(stream.src, steps, b, -1).astype(np.int32)
+    dst = _padded(stream.dst, steps, b, -1).astype(np.int32)
+    t = _padded(stream.t.astype(np.float32), steps, b, 0.0)
+    eidx = _padded(stream.eidx, steps, b, -1).astype(np.int32)
+    neg = rng.choice(neg_pool, size=(steps, b)).astype(np.int32)
+    valid = _padded(np.ones(n_edges, dtype=bool), steps, b, False)
+
+    batches = {"src": src, "dst": dst, "neg": neg,
+               "t": t, "eidx": eidx, "valid": valid}
+    if stream.labels is not None:
+        batches["labels"] = _padded(stream.labels, steps, b, -1)
+
+    # neighbors as of each row's own batch boundary (strictly-before-batch)
+    batch_of = np.broadcast_to(np.arange(steps)[:, None], (steps, b))
+    for role, ids in (("src", src), ("dst", dst), ("neg", neg)):
+        alive = (ids >= 0) & valid
+        clean = np.where(alive, ids, 0)
+        nb, nt, ne = index.sample(clean.ravel(), batch_of.ravel())
+        nb = nb.reshape(steps, b, k)
+        nt = nt.reshape(steps, b, k)
+        ne = ne.reshape(steps, b, k)
+        nb[~alive] = -1
+        ne[~alive] = -1
+        batches[f"nbr_{role}"] = nb.astype(np.int32)
+        batches[f"nbrt_{role}"] = nt.astype(np.float32)
+        batches[f"nbre_{role}"] = ne.astype(np.int32)
+
+    return batches, index.final_snapshot()
+
+
 def build_batches(
     stream: LocalStream,
     cfg: TIGConfig,
     rng: np.random.Generator,
-    sampler: Optional[RecentNeighborBuffer] = None,
+    history: Optional[NeighborSnapshot] = None,
     neg_pool: Optional[np.ndarray] = None,
-) -> list[dict]:
-    """Chronological fixed-shape batches with pre-sampled neighbors.
+    *,
+    return_history: bool = False,
+):
+    """Chronological fixed-shape batches with pre-sampled neighbors, as a
+    list of per-batch numpy dicts matching ``models.step_loss``.
 
-    Args:
-      sampler: ring-buffer index; mutated in place (pass a fresh one per
-        epoch/evaluation continuation).  Defaults to a new empty buffer.
-      neg_pool: candidate local ids for negative sampling (defaults to the
-        stream's destination nodes — the JODIE/TGN convention).
-
-    Returns a list of numpy batch dicts matching ``models.step_loss``.
+    With ``return_history=True`` also returns the post-stream
+    ``NeighborSnapshot`` for continuing into a later stream.
     """
-    b, k = cfg.batch_size, cfg.num_neighbors
-    if sampler is None:
-        sampler = RecentNeighborBuffer(stream.num_local_nodes, k)
-    if neg_pool is None or len(neg_pool) == 0:
-        neg_pool = np.unique(stream.dst)
-    n_edges = stream.num_edges
-    num_batches = max(1, -(-n_edges // b))
-    batches = []
-    for bi in range(num_batches):
-        lo, hi = bi * b, min((bi + 1) * b, n_edges)
-        size = hi - lo
-        pad = b - size
-
-        def padded(x, fill):
-            out = np.full((b,) + x.shape[1:], fill, dtype=x.dtype)
-            out[:size] = x[lo:hi]
-            return out
-
-        src = padded(stream.src, -1).astype(np.int32)
-        dst = padded(stream.dst, -1).astype(np.int32)
-        t = padded(stream.t.astype(np.float32), 0.0)
-        eidx = padded(stream.eidx, -1)
-        neg = rng.choice(neg_pool, size=b).astype(np.int32)
-        valid = np.zeros(b, dtype=bool)
-        valid[:size] = True
-
-        batch = {
-            "src": src, "dst": dst, "neg": neg,
-            "t": t, "eidx": eidx.astype(np.int32), "valid": valid,
-        }
-        if stream.labels is not None:
-            batch["labels"] = padded(stream.labels, -1)
-
-        # neighbors BEFORE this batch touches the index
-        for role, ids in (("src", src), ("dst", dst), ("neg", neg)):
-            clean = np.where((ids >= 0) & valid, ids, 0)
-            nb, nt, ne = sampler.sample(clean)
-            dead = ~((ids >= 0) & valid)
-            nb[dead] = -1
-            ne[dead] = -1
-            batch[f"nbr_{role}"] = nb.astype(np.int32)
-            batch[f"nbrt_{role}"] = nt.astype(np.float32)
-            batch[f"nbre_{role}"] = ne.astype(np.int32)
-
-        sampler.update(stream.src[lo:hi], stream.dst[lo:hi],
-                       stream.t[lo:hi], stream.eidx[lo:hi])
-        batches.append(batch)
-    return batches
+    stacked, final = build_batch_program(stream, cfg, rng, history, neg_pool)
+    batches = unstack_batches(stacked)
+    return (batches, final) if return_history else batches
 
 
 def stack_batches(batches: list[dict]) -> dict:
     """Stack per-step batch dicts into (steps, ...) arrays for lax.scan."""
     keys = batches[0].keys()
     return {k: np.stack([b[k] for b in batches]) for k in keys}
+
+
+def unstack_batches(stacked: dict) -> list[dict]:
+    """Inverse of ``stack_batches``: (steps, ...) pytree -> list of dicts."""
+    steps = len(next(iter(stacked.values())))
+    return [{k: v[s] for k, v in stacked.items()} for s in range(steps)]

@@ -1,7 +1,10 @@
 """PAC — distributed parallel training of TIG models (paper §II-C, Alg.2).
 
 The device half of the Parallel Acceleration Component.  One *device epoch*
-is a single jitted program per device:
+is a single jitted program per device — the scanned step program of
+``repro.tig.engine`` (shared with the single-device baseline) with DDP
+gradient ``pmean`` over the "part" axis and Alg.2 cycle semantics
+(``cycle_length``), followed here by the PAC-specific epilogue:
 
     scan over lockstep global steps s in [0, steps_per_epoch):
       1. if s is my cycle start:  reset node memory (Alg.2 line 6-7)
@@ -37,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.pac import (
     CycleSchedule,
     build_subgraph,
@@ -46,10 +50,10 @@ from repro.core.pac import (
 )
 from repro.core.sep import PartitionResult
 from repro.optim import Optimizer
-from repro.tig.batching import LocalStream, build_batches, stack_batches
+from repro.tig.batching import LocalStream, build_batch_program
+from repro.tig.engine import scan_train_epoch
 from repro.tig.graph import TemporalGraph
-from repro.tig.models import TIGConfig, init_params, init_state, step_loss
-from repro.tig.sampler import RecentNeighborBuffer
+from repro.tig.models import TIGConfig, init_params, init_state
 from repro.tig.train import time_scale_of
 
 __all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "pac_train",
@@ -120,13 +124,12 @@ def plan_epoch(
 
     per_dev_stacked = []
     for k, stream in enumerate(streams):
-        sampler = RecentNeighborBuffer(cap, cfg.num_neighbors)
-        real = build_batches(stream, cfg, rng, sampler)
+        real, _ = build_batch_program(stream, cfg, rng)
         # Alg.2 wrap-around: replay from the start; the neighbor index is
         # implicitly reset each cycle because replayed batches reuse the
         # first-cycle samples.
-        seq = [real[s % len(real)] for s in range(steps)]
-        per_dev_stacked.append(stack_batches(seq))
+        replay = np.arange(steps) % len(real["src"])
+        per_dev_stacked.append({k: v[replay] for k, v in real.items()})
     batches = {
         k: np.stack([d[k] for d in per_dev_stacked])
         for k in per_dev_stacked[0]
@@ -173,10 +176,6 @@ def plan_epoch(
 # the device-epoch program
 # ======================================================================
 
-def _tree_where(pred, a, b):
-    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
-
-
 def device_epoch(
     params,
     opt_state,
@@ -193,31 +192,20 @@ def device_epoch(
     sync_mode: Literal["latest", "mean"] = "latest",
     axis: str = "part",
 ):
-    """One epoch on one device (runs under vmap or shard_map over ``axis``)."""
+    """One epoch on one device (runs under vmap or shard_map over ``axis``).
+
+    The scan itself is the shared engine program (``engine.scan_train_epoch``
+    with ``cycle_length`` = this device's real batch count and DDP gradient
+    sync over ``axis``); the PAC-specific shared-node memory sync runs as
+    the epilogue below.
+    """
+    del steps  # stream length is carried by the batches pytree itself
     tables = {"efeat": efeat, "nfeat": nfeat_local}
     fresh = init_state(cfg, capacity)
 
-    def scan_step(carry, batch):
-        params, opt_state, state, backup, s = carry
-        # Alg.2 lines 6-7: reset memory at each data-cycle start
-        is_start = (s % n_batches) == 0
-        state = _tree_where(is_start, fresh, state)
-        (loss, (state, _aux)), grads = jax.value_and_grad(
-            step_loss, has_aux=True
-        )(params, state, batch, tables, cfg)
-        grads = jax.lax.pmean(grads, axis)
-        params, opt_state = opt.apply(grads, opt_state, params)
-        # Alg.2 lines 10-11: back up memory at each data-cycle end
-        is_end = ((s + 1) % n_batches) == 0
-        backup = _tree_where(is_end, state, backup)
-        return (params, opt_state, state, backup, s + 1), loss
-
-    carry0 = (params, opt_state, fresh, fresh, jnp.zeros((), jnp.int32))
-    (params, opt_state, _state, backup, _), losses = jax.lax.scan(
-        scan_step, carry0, batches, length=steps)
-
-    # epoch end: restore the latest complete-cycle memory (Alg.2)
-    state = backup
+    params, opt_state, state, losses = scan_train_epoch(
+        params, opt_state, fresh, batches, tables,
+        cfg=cfg, opt=opt, axis=axis, cycle_length=n_batches)
 
     # shared-node memory synchronization (paper §II-C).
     # §Perf iteration C1: instead of all-gathering the full (N_dev, S, d)
@@ -305,12 +293,11 @@ def make_pac_epoch(
         expand = lambda t: jax.tree.map(lambda x: x[None], t)
         return p, o, expand(state), expand(losses)
 
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(rep, rep, part, part, part, part, part),
         out_specs=(rep, rep, part, part),
-        check_vma=False,
     )
     return jax.jit(smapped)
 

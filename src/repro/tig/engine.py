@@ -1,0 +1,172 @@
+"""Device-resident streaming epoch engine — ONE scan-based step program.
+
+The single source of truth for the TIG hot path.  Both the single-device
+baseline (``repro.tig.train``) and the PAC distributed trainer
+(``repro.tig.distributed``) drive their epochs through the scanned programs
+here instead of dispatching one jitted call per batch from a Python loop:
+the whole epoch — flush pending messages, embed, decode, loss, grads,
+optimizer — runs as one ``lax.scan`` on device over a pre-staged
+(steps, ...) batch pytree, with buffer donation so params/optimizer/memory
+update in place.
+
+``scan_train_epoch`` is written once and parameterized by:
+
+  * ``axis``          — ``None`` for single-device; a mapped axis name for
+                        DDP (gradients are ``pmean``'d over it before the
+                        update), under either ``jax.vmap`` simulation or
+                        ``jax.shard_map`` SPMD;
+  * ``cycle_length``  — ``None`` for a plain chronological pass; an int
+                        array for the paper's Alg.2 loop-within-epoch
+                        semantics (reset node memory at each data-cycle
+                        start, back it up at each cycle end, restore the
+                        last complete backup at epoch end).
+
+Kernel routing (``cfg.use_pallas`` / ``cfg.kernel_backend``) happens inside
+``models.step_loss``: the neighbor-aggregation attention and the GRU memory
+update go through ``repro.kernels`` Pallas kernels, with the XLA path as
+fallback.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+from repro.tig.models import TIGConfig, init_state, step_loss
+
+__all__ = [
+    "scan_train_epoch",
+    "scan_eval_stream",
+    "make_train_epoch",
+    "make_eval_epoch",
+]
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _donate_args(*argnums: int) -> tuple[int, ...]:
+    """Buffer donation saves one params+opt+memory copy per epoch, but CPU
+    jit only warns that donation is unimplemented — keep test logs clean."""
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+# ----------------------------------------------------------------- training
+
+def scan_train_epoch(
+    params,
+    opt_state,
+    state,
+    batches,                 # pytree of (steps, ...) arrays
+    tables,                  # {"efeat": (E+1, d_e), "nfeat": (N+1, d_n)}
+    *,
+    cfg: TIGConfig,
+    opt: Optimizer,
+    axis: Optional[str] = None,
+    cycle_length=None,       # () int array or None
+):
+    """One training epoch as a single scan (traced; jit/vmap/shard_map it).
+
+    Returns ``(params, opt_state, state, losses)`` with ``losses`` of shape
+    (steps,).  With ``cycle_length`` set, ``state`` is the backup taken at
+    the end of the last *complete* data cycle (paper Alg.2 lines 10-11);
+    otherwise it is simply the post-stream state.
+    """
+    cycling = cycle_length is not None
+    fresh = init_state(cfg, state["mem"].shape[0] - 1)
+
+    def step_body(params, opt_state, state, batch):
+        (loss, (state, _aux)), grads = jax.value_and_grad(
+            step_loss, has_aux=True
+        )(params, state, batch, tables, cfg)
+        if axis is not None:
+            grads = jax.lax.pmean(grads, axis)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        return params, opt_state, state, loss
+
+    if not cycling:
+        def scan_step(carry, batch):
+            params, opt_state, state = carry
+            params, opt_state, state, loss = step_body(
+                params, opt_state, state, batch)
+            return (params, opt_state, state), loss
+
+        (params, opt_state, state), losses = jax.lax.scan(
+            scan_step, (params, opt_state, state), batches)
+        return params, opt_state, state, losses
+
+    n_cycle = jnp.asarray(cycle_length, jnp.int32)
+
+    def scan_step(carry, batch):
+        params, opt_state, state, backup, s = carry
+        # Alg.2 lines 6-7: reset memory at each data-cycle start
+        is_start = (s % n_cycle) == 0
+        state = _tree_where(is_start, fresh, state)
+        params, opt_state, state, loss = step_body(
+            params, opt_state, state, batch)
+        # Alg.2 lines 10-11: back up memory at each data-cycle end
+        is_end = ((s + 1) % n_cycle) == 0
+        backup = _tree_where(is_end, state, backup)
+        return (params, opt_state, state, backup, s + 1), loss
+
+    carry0 = (params, opt_state, state, fresh, jnp.zeros((), jnp.int32))
+    (params, opt_state, _state, backup, _), losses = jax.lax.scan(
+        scan_step, carry0, batches)
+    # epoch end: restore the latest complete-cycle memory (Alg.2)
+    return params, opt_state, backup, losses
+
+
+def make_train_epoch(cfg: TIGConfig, opt: Optimizer):
+    """jit'd single-device epoch: (params, opt_state, state, batches,
+    tables) -> (params, opt_state, state, losses), donating the carried
+    buffers."""
+    fn = functools.partial(scan_train_epoch, cfg=cfg, opt=opt)
+    return jax.jit(fn, donate_argnums=_donate_args(0, 1, 2))
+
+
+# --------------------------------------------------------------- evaluation
+
+def scan_eval_stream(
+    params,
+    state,
+    batches,                 # pytree of (steps, ...) arrays
+    tables,
+    *,
+    cfg: TIGConfig,
+    collect_embeddings: bool = False,
+):
+    """Forward-only scan over a chronological stream (memory keeps
+    updating, params frozen).
+
+    Returns ``(state, aux)`` with ``aux`` holding (steps, B)-stacked
+    ``pos_logit`` / ``neg_logit``, plus (steps, B, d) ``src_embed`` when
+    ``collect_embeddings`` (off by default — the stack is steps*B*d floats,
+    only the node-classification protocol needs it).
+    """
+
+    def scan_step(state, batch):
+        _loss, (state, aux) = step_loss(params, state, batch, tables, cfg)
+        out = {"pos_logit": aux["pos_logit"],
+               "neg_logit": aux["neg_logit"]}
+        if collect_embeddings:
+            out["src_embed"] = aux["src_embed"]
+        return state, out
+
+    return jax.lax.scan(scan_step, state, batches)
+
+
+def make_eval_epoch(cfg: TIGConfig, *, collect_embeddings: bool = False):
+    """jit'd eval-stream program: (params, state, batches, tables) ->
+    (state, stacked aux).
+
+    No buffer donation here: callers legitimately reuse the input state
+    (e.g. train_single evaluates val from the epoch-end memory it also
+    keeps for the returned result)."""
+    fn = functools.partial(scan_eval_stream, cfg=cfg,
+                           collect_embeddings=collect_embeddings)
+    return jax.jit(fn)

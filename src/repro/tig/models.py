@@ -78,9 +78,18 @@ class TIGConfig:
     batch_size: int = 200
     n_classes: int = 0         # >0 enables the node-classification head
     use_pallas: bool = False   # route UPD/attention through Pallas kernels
+    kernel_backend: str = "auto"  # with use_pallas: "auto" | "pallas" |
+                                  # "interpret" (CPU-testable Pallas path)
 
     def __post_init__(self):
         assert self.flavor in FLAVORS, self.flavor
+        assert self.kernel_backend in ("auto", "pallas", "interpret"), \
+            self.kernel_backend
+
+    @property
+    def backend(self) -> str:
+        """Kernel backend for this config ("xla" unless use_pallas)."""
+        return self.kernel_backend if self.use_pallas else "xla"
 
     @property
     def raw_msg_dim(self) -> int:
@@ -174,7 +183,8 @@ def flush_pending(params: dict, cfg: TIGConfig, state: dict) -> dict:
         from repro.kernels import ops
         p = params["upd"]
         s_new = ops.gru(mbar, s_old, p["xz"]["w"], p["hz"]["w"],
-                        p["xz"]["b"], p["hz"]["b"], backend="auto")
+                        p["xz"]["b"], p["hz"]["b"],
+                        backend=cfg.kernel_backend)
     else:
         upd_fn = gru if cfg.updater == "gru" else rnn
         s_new = upd_fn(params["upd"], mbar, s_old)
@@ -265,8 +275,7 @@ def embed_nodes(
     q_in = jnp.concatenate([s, nf, phi_self], axis=-1)
     kv_in = jnp.concatenate([s_nbr, e_nbr, phi_nbr], axis=-1)
     h = temporal_attention(params["attn"], q_in, kv_in, mask,
-                           n_heads=cfg.n_heads,
-                           backend=("auto" if cfg.use_pallas else "xla"))
+                           n_heads=cfg.n_heads, backend=cfg.backend)
     return h
 
 
@@ -299,14 +308,23 @@ def step_loss(
     # 1) apply previous batch's messages (grads flow into MSG/UPD here)
     state = flush_pending(params, cfg, state)
 
-    # 2) embeddings at time t from the just-updated memory
-    embeds = {}
-    for role, ids in (("src", ids_s), ("dst", ids_d), ("neg", ids_n)):
-        embeds[role] = embed_nodes(
-            params, cfg, state, tables, ids, batch["t"],
-            batch[f"nbr_{role}"], batch[f"nbrt_{role}"],
-            batch[f"nbre_{role}"],
-        )
+    # 2) embeddings at time t from the just-updated memory — the three
+    # roles share one (3B,)-fused embed call (one attention launch instead
+    # of three; row-wise identical math)
+    b = ids_s.shape[0]
+    ids_all = jnp.concatenate([ids_s, ids_d, ids_n])
+    emb_all = embed_nodes(
+        params, cfg, state, tables, ids_all,
+        jnp.tile(batch["t"], 3),
+        jnp.concatenate([batch["nbr_src"], batch["nbr_dst"],
+                         batch["nbr_neg"]]),
+        jnp.concatenate([batch["nbrt_src"], batch["nbrt_dst"],
+                         batch["nbrt_neg"]]),
+        jnp.concatenate([batch["nbre_src"], batch["nbre_dst"],
+                         batch["nbre_neg"]]),
+    )
+    embeds = {"src": emb_all[:b], "dst": emb_all[b:2 * b],
+              "neg": emb_all[2 * b:]}
 
     # 3) self-supervised link prediction loss (paper §II-C decoder g)
     pos_logit = mlp(params["dec"], jnp.concatenate(

@@ -1,4 +1,4 @@
-"""Host-side temporal neighbor sampling (most-recent-K ring buffers).
+"""Host-side temporal neighbor sampling.
 
 TIG embedding modules aggregate over a node's *temporal* neighbors — edges
 that happened strictly before the current batch (no future leakage).  Like
@@ -7,21 +7,184 @@ neighbor index lives on the host: the jitted device step receives, per batch,
 the pre-sampled neighbor ids / times / edge indices and gathers features and
 memory rows on device.
 
-``RecentNeighborBuffer`` keeps, per node, a ring buffer of its K most recent
-(neighbor id, timestamp, edge index) triples — the "most recent neighbors"
-sampling the paper's Eq.1 intuition is built on ("more recent events often
-have a greater impact").
+Two implementations:
+
+``ChronoNeighborIndex`` — the training-path index (TGL-style vectorized
+T-CSR).  Built ONCE per stream with ``np.lexsort``: all 2E endpoint events
+are sorted by (node, chronological rank) so each node owns one contiguous,
+time-sorted segment.  Sampling the K most recent neighbors *as of* any batch
+boundary is then pure ``searchsorted`` + slicing — no per-edge Python work
+anywhere.  A ``NeighborSnapshot`` captures the index state after a stream so
+a later stream (val/test continuation) can pick up the history.
+
+``RecentNeighborBuffer`` — the original mutable ring-buffer index (kept as
+the reference oracle for property tests; O(E) Python-interpreted ``update``).
+Both produce identical samples: K most recent (id, time, edge) triples per
+node, ordered oldest -> newest, front-padded with -1.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-__all__ = ["RecentNeighborBuffer"]
+__all__ = ["RecentNeighborBuffer", "NeighborSnapshot", "ChronoNeighborIndex"]
+
+
+@dataclasses.dataclass
+class NeighborSnapshot:
+    """Per-node K most recent neighbors after a stream was consumed.
+
+    Layout matches ``RecentNeighborBuffer.sample`` output: rows ordered
+    oldest -> newest with empty slots as -1 at the FRONT.
+    """
+
+    nbr: np.ndarray    # (N, K) int64, -1 for empty
+    time: np.ndarray   # (N, K) float64, -1.0 for empty
+    eidx: np.ndarray   # (N, K) int64, -1 for empty
+
+    @property
+    def num_nodes(self) -> int:
+        return self.nbr.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.nbr.shape[1]
+
+    @classmethod
+    def empty(cls, num_nodes: int, k: int) -> "NeighborSnapshot":
+        return cls(
+            nbr=np.full((num_nodes, k), -1, dtype=np.int64),
+            time=np.full((num_nodes, k), -1.0, dtype=np.float64),
+            eidx=np.full((num_nodes, k), -1, dtype=np.int64),
+        )
+
+
+class ChronoNeighborIndex:
+    """Vectorized chronological neighbor index over a full edge stream.
+
+    Endpoint events are ranked exactly as the streaming ring buffer would
+    apply them: batch by batch, and within a batch by a stable sort on event
+    time (so equal-time src-side events precede dst-side events — the ring
+    buffer's ``concatenate([src, dst])`` + stable-argsort order).  Events are
+    then sorted by (node, rank) into per-node contiguous segments (T-CSR).
+
+    ``sample`` with a per-row batch index returns, for each queried node, its
+    K most recent events among {history} ∪ {stream events in earlier
+    batches} — identical to replaying sample/update with a ring buffer.
+    """
+
+    def __init__(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        t: np.ndarray,
+        eidx: np.ndarray,
+        num_nodes: int,
+        k: int,
+        batch_size: int,
+        history: NeighborSnapshot | None = None,
+    ):
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        t = np.asarray(t, np.float64)
+        eidx = np.asarray(eidx, np.int64)
+        n_edges = len(src)
+        self.num_nodes = num_nodes
+        self.k = k
+        self.batch_size = batch_size
+        self.num_batches = max(1, -(-n_edges // batch_size)) if n_edges else 0
+
+        edge_i = np.arange(n_edges, dtype=np.int64)
+        batch_of = edge_i // batch_size
+        # 2E endpoint events: src-side (side 0) then dst-side (side 1)
+        ev_node = np.concatenate([src, dst])
+        ev_other = np.concatenate([dst, src])
+        ev_t = np.concatenate([t, t])
+        ev_e = np.concatenate([eidx, eidx])
+        ev_batch = np.concatenate([batch_of, batch_of])
+        ev_side = np.concatenate([np.zeros(n_edges, np.int64),
+                                  np.ones(n_edges, np.int64)])
+        ev_edge = np.concatenate([edge_i, edge_i])
+
+        if history is not None:
+            assert history.num_nodes == num_nodes and history.k >= 1
+            live = history.nbr >= 0                       # (N, Kh)
+            h_node, h_slot = np.nonzero(live)
+            ev_node = np.concatenate([h_node, ev_node])
+            ev_other = np.concatenate([history.nbr[live], ev_other])
+            ev_t = np.concatenate([history.time[live], ev_t])
+            ev_e = np.concatenate([history.eidx[live], ev_e])
+            # history strictly precedes the stream: batch -1, slot order
+            nh = len(h_node)
+            ev_batch = np.concatenate([np.full(nh, -1, np.int64), ev_batch])
+            ev_side = np.concatenate([np.zeros(nh, np.int64), ev_side])
+            ev_edge = np.concatenate([h_slot.astype(np.int64), ev_edge])
+
+        # sort by (node, batch, time, side, edge index): per-node contiguous
+        # segments in exact ring-buffer application order.
+        order = np.lexsort((ev_edge, ev_side, ev_t, ev_batch, ev_node))
+        self._nbr = ev_other[order]
+        self._t = ev_t[order]
+        self._e = ev_e[order]
+        node_s = ev_node[order]
+        batch_s = ev_batch[order]
+        counts = np.bincount(node_s, minlength=num_nodes)
+        self._indptr = np.concatenate(
+            [np.zeros(1, np.int64), np.cumsum(counts)])
+        # combined (node, batch) key for vectorized "events before batch b"
+        # prefix queries; +1 shifts history's batch -1 to 0.
+        self._nb = self.num_batches + 1
+        self._bkey = node_s * self._nb + (batch_s + 1)
+
+    def sample(
+        self,
+        nodes: np.ndarray,
+        batch_of: np.ndarray | int,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """K most recent neighbors of ``nodes`` as of batch ``batch_of``.
+
+        ``batch_of`` is scalar or per-row: events of stream batches
+        >= batch_of are excluded (history always included).  Pass
+        ``self.num_batches`` to see the whole stream.  Shapes:
+        (len(nodes), K) ids / times / edge indices, oldest -> newest,
+        -1 front-padded (times -1.0) — bit-identical to
+        ``RecentNeighborBuffer.sample`` after the same updates.
+        """
+        nodes = np.asarray(nodes, dtype=np.int64)
+        batch_of = np.broadcast_to(np.asarray(batch_of, np.int64),
+                                   nodes.shape)
+        start = self._indptr[nodes]
+        end = np.searchsorted(self._bkey, nodes * self._nb + (batch_of + 1),
+                              side="left")
+        idx = end[:, None] - self.k + np.arange(self.k)[None, :]
+        valid = idx >= start[:, None]
+        idx = np.clip(idx, 0, max(len(self._nbr) - 1, 0))
+        if len(self._nbr) == 0:
+            shape = (len(nodes), self.k)
+            return (np.full(shape, -1, np.int64),
+                    np.full(shape, -1.0, np.float64),
+                    np.full(shape, -1, np.int64))
+        ids = np.where(valid, self._nbr[idx], -1)
+        tms = np.where(valid, self._t[idx], -1.0)
+        eix = np.where(valid, self._e[idx], -1)
+        return ids, tms, eix
+
+    def final_snapshot(self) -> NeighborSnapshot:
+        """Index state after the full stream (for val/test continuation)."""
+        all_nodes = np.arange(self.num_nodes, dtype=np.int64)
+        ids, tms, eix = self.sample(all_nodes, self.num_batches)
+        return NeighborSnapshot(nbr=ids, time=tms, eidx=eix)
 
 
 class RecentNeighborBuffer:
     """Most-recent-K temporal neighbor index (mutable, host-side).
+
+    The original streaming implementation — an O(E) interpreted per-edge
+    loop in ``update``.  No longer on the training path (``build_batches``
+    uses ``ChronoNeighborIndex``); retained as the reference oracle the
+    vectorized index is property-tested against.
 
     All arrays use -1 for empty slots.  ``sample`` must be called *before*
     ``update`` for the same batch (neighbors strictly precede the batch).
@@ -72,6 +235,11 @@ class RecentNeighborBuffer:
             self.time[n, slot] = tt
             self.eidx[n, slot] = ee
             self.ptr[n] += 1
+
+    def snapshot(self) -> NeighborSnapshot:
+        """Current state in the oldest->newest front-padded layout."""
+        ids, tms, eix = self.sample(np.arange(self.num_nodes))
+        return NeighborSnapshot(nbr=ids, time=tms, eidx=eix)
 
     def copy(self) -> "RecentNeighborBuffer":
         out = RecentNeighborBuffer(self.num_nodes, self.k)

@@ -1,14 +1,16 @@
 """Single-device TIG training & evaluation (the paper's non-partitioned
 baseline — 'Single-GPU' / 'w/o Partitioning' rows of Tab.III/IV).
 
-The distributed PAC trainer (multi-device) is ``repro.tig.distributed``; it
-reuses the step functions defined here.
+Epochs run through the device-resident streaming engine
+(``repro.tig.engine``): host planning pre-stages the whole chronological
+stream as one (steps, ...) batch pytree, and a single jitted ``lax.scan``
+executes the epoch on device.  The distributed PAC trainer
+(``repro.tig.distributed``) drives the same scan program.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional
 
@@ -19,13 +21,14 @@ import numpy as np
 from repro.optim import adamw, Optimizer
 from repro.tig.batching import (
     LocalStream,
-    build_batches,
+    build_batch_program,
     make_tables,
+    stack_batches,
 )
+from repro.tig.engine import make_eval_epoch, make_train_epoch
 from repro.tig.evaluation import average_precision, roc_auc
 from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state, step_loss
-from repro.tig.sampler import RecentNeighborBuffer
 
 __all__ = [
     "graph_as_stream",
@@ -65,8 +68,19 @@ def graph_as_stream(g: TemporalGraph) -> tuple[LocalStream, dict]:
     return stream, make_tables(g.edge_feat, g.node_feat)
 
 
+def _device_batches(stacked_or_list) -> dict:
+    """Accept either a (steps, ...) pytree or a list of per-batch dicts and
+    return a jnp (steps, ...) pytree without host-side labels."""
+    stacked = stacked_or_list
+    if isinstance(stacked, (list, tuple)):
+        stacked = stack_batches(list(stacked))
+    return {k: jnp.asarray(v) for k, v in stacked.items() if k != "labels"}
+
+
 def make_train_step(cfg: TIGConfig, opt: Optimizer):
-    """jit'd (params, opt_state, state, batch, tables) -> updated + loss."""
+    """jit'd per-batch step (params, opt_state, state, batch, tables) ->
+    updated + loss.  The epoch hot path uses ``engine.make_train_epoch``;
+    this single-step variant remains for debugging and parity tests."""
 
     @jax.jit
     def step(params, opt_state, state, batch, tables):
@@ -90,15 +104,17 @@ def make_eval_step(cfg: TIGConfig):
     return step
 
 
-def train_epoch(params, opt_state, state, batches, tables_j, step_fn):
-    """One pass over prepared batches; returns mean loss."""
-    losses = []
-    for batch in batches:
-        bj = {k: jnp.asarray(v) for k, v in batch.items() if k != "labels"}
-        params, opt_state, state, loss = step_fn(
-            params, opt_state, state, bj, tables_j)
-        losses.append(float(loss))
-    return params, opt_state, state, float(np.mean(losses))
+def train_epoch(params, opt_state, state, batches, tables_j, epoch_fn):
+    """One pass over prepared batches as a single scanned device program.
+
+    ``batches`` is a (steps, ...) pytree (or a legacy list of per-batch
+    dicts); ``epoch_fn`` comes from ``engine.make_train_epoch``.  Returns
+    mean loss over steps.
+    """
+    bj = _device_batches(batches)
+    params, opt_state, state, losses = epoch_fn(
+        params, opt_state, state, bj, tables_j)
+    return params, opt_state, state, float(jnp.mean(losses))
 
 
 def evaluate_stream(
@@ -107,35 +123,28 @@ def evaluate_stream(
     state,
     batches,
     tables_j,
-    eval_step,
+    eval_epoch_fn,
     inductive_edge_mask: Optional[np.ndarray] = None,
     collect_embeddings: bool = False,
 ):
     """Run a chronological stream through the model (memory keeps updating,
-    params frozen) and compute link-prediction AP.
+    params frozen) as one scanned program and compute link-prediction AP.
 
-    Returns dict with transductive AP/AUC, optional inductive AP (edges
-    touching never-seen-in-train nodes), optional collected src embeddings,
-    and the post-stream state (for continuing to the next split).
+    ``batches`` is a (steps, ...) pytree (or legacy list) that still carries
+    the host-side ``valid`` / ``labels`` entries; ``eval_epoch_fn`` comes
+    from ``engine.make_eval_epoch``.  Returns dict with transductive AP/AUC,
+    optional inductive AP (edges touching never-seen-in-train nodes),
+    optional collected src embeddings, and the post-stream state (for
+    continuing to the next split).
     """
-    pos_all, neg_all, ind_mask_all, embeds, labels = [], [], [], [], []
-    offset = 0
-    for batch in batches:
-        bj = {k: jnp.asarray(v) for k, v in batch.items() if k != "labels"}
-        state, aux = eval_step(params, state, bj, tables_j)
-        valid = np.asarray(batch["valid"])
-        n = int(valid.sum())
-        pos_all.append(np.asarray(aux["pos_logit"])[:n])
-        neg_all.append(np.asarray(aux["neg_logit"])[:n])
-        if inductive_edge_mask is not None:
-            ind_mask_all.append(inductive_edge_mask[offset: offset + n])
-        if collect_embeddings:
-            embeds.append(np.asarray(aux["src_embed"])[:n])
-            if "labels" in batch:
-                labels.append(np.asarray(batch["labels"])[:n])
-        offset += n
-    pos = np.concatenate(pos_all)
-    neg = np.concatenate(neg_all)
+    if isinstance(batches, (list, tuple)):
+        batches = stack_batches(list(batches))
+    bj = _device_batches(batches)
+    state, aux = eval_epoch_fn(params, state, bj, tables_j)
+
+    valid = np.asarray(batches["valid"]).reshape(-1)      # (steps*B,)
+    pos = np.asarray(aux["pos_logit"]).reshape(-1)[valid]
+    neg = np.asarray(aux["neg_logit"]).reshape(-1)[valid]
     y = np.concatenate([np.ones_like(pos), np.zeros_like(neg)])
     s = np.concatenate([pos, neg])
     out = {
@@ -144,7 +153,7 @@ def evaluate_stream(
         "state": state,
     }
     if inductive_edge_mask is not None:
-        m = np.concatenate(ind_mask_all).astype(bool)
+        m = np.asarray(inductive_edge_mask[: len(pos)]).astype(bool)
         if m.any():
             y_i = np.concatenate([np.ones(m.sum()), np.zeros(m.sum())])
             s_i = np.concatenate([pos[m], neg[m]])
@@ -152,8 +161,16 @@ def evaluate_stream(
         else:
             out["ap_inductive"] = float("nan")
     if collect_embeddings:
-        out["embeddings"] = np.concatenate(embeds) if embeds else None
-        out["labels"] = np.concatenate(labels) if labels else None
+        if "src_embed" not in aux:
+            raise ValueError(
+                "collect_embeddings=True needs an eval program built with "
+                "make_eval_epoch(cfg, collect_embeddings=True)")
+        emb = np.asarray(aux["src_embed"])
+        out["embeddings"] = emb.reshape(-1, emb.shape[-1])[valid]
+        if "labels" in batches:
+            out["labels"] = np.asarray(batches["labels"]).reshape(-1)[valid]
+        else:
+            out["labels"] = None
     return out
 
 
@@ -241,23 +258,26 @@ def evaluate_params(
             labels=None if g.labels is None else g.labels[lo:hi],
         )
 
-    eval_fn = make_eval_step(cfg)
+    eval_fn = make_eval_epoch(cfg)
+    eval_fn_test = make_eval_epoch(cfg, collect_embeddings=True) \
+        if eval_node_class else eval_fn
     neg_pool = np.unique(stream.dst)
-    sampler = RecentNeighborBuffer(g.num_nodes, cfg.num_neighbors)
     state = init_state(cfg, g.num_nodes)
 
-    tr_batches = build_batches(sub(0, n_tr), cfg, rng, sampler, neg_pool)
+    tr_batches, hist = build_batch_program(
+        sub(0, n_tr), cfg, rng, neg_pool=neg_pool)
     res_tr = evaluate_stream(params, cfg, state, tr_batches, tables_j,
                              eval_fn)
-    val_batches = build_batches(sub(n_tr, n_tr + n_val), cfg, rng,
-                                sampler, neg_pool)
+    val_batches, hist = build_batch_program(
+        sub(n_tr, n_tr + n_val), cfg, rng, history=hist, neg_pool=neg_pool)
     res_val = evaluate_stream(params, cfg, res_tr["state"], val_batches,
                               tables_j, eval_fn)
     test_stream = sub(n_tr + n_val, g.num_edges)
     ind_mask = ind[test_stream.src] | ind[test_stream.dst]
-    test_batches = build_batches(test_stream, cfg, rng, sampler, neg_pool)
+    test_batches, _ = build_batch_program(
+        test_stream, cfg, rng, history=hist, neg_pool=neg_pool)
     res_test = evaluate_stream(
-        params, cfg, res_val["state"], test_batches, tables_j, eval_fn,
+        params, cfg, res_val["state"], test_batches, tables_j, eval_fn_test,
         inductive_edge_mask=ind_mask, collect_embeddings=eval_node_class)
 
     out = {
@@ -298,7 +318,10 @@ def train_single(
     eval_node_class: bool = False,
 ) -> SingleResult:
     """The paper's single-device baseline trainer: chronological 70/15/15
-    split, memory reset per epoch, val/test continue the epoch-end memory."""
+    split, memory reset per epoch, val/test continue the epoch-end memory.
+
+    Each epoch is one host-planning pass (vectorized neighbor index + batch
+    grid) followed by one scanned device program."""
     from repro.tig.graph import chronological_split
 
     rng = np.random.default_rng(seed)
@@ -311,7 +334,7 @@ def train_single(
     n_tr = train_g.num_edges
     n_val = val_g.num_edges
 
-    def sub(lo, hi, g_sub):
+    def sub(lo, hi):
         return LocalStream(
             src=stream.src[lo:hi], dst=stream.dst[lo:hi],
             t=stream.t[lo:hi], eidx=stream.eidx[lo:hi],
@@ -319,43 +342,44 @@ def train_single(
             labels=None if g.labels is None else g.labels[lo:hi],
         )
 
-    tr_stream = sub(0, n_tr, train_g)
-    val_stream = sub(n_tr, n_tr + n_val, val_g)
-    test_stream = sub(n_tr + n_val, g.num_edges, test_g)
+    tr_stream = sub(0, n_tr)
+    val_stream = sub(n_tr, n_tr + n_val)
+    test_stream = sub(n_tr + n_val, g.num_edges)
 
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt = adamw(lr=lr, max_grad_norm=1.0)
     opt_state = opt.init(params)
-    step_fn = make_train_step(cfg, opt)
-    eval_fn = make_eval_step(cfg)
+    epoch_fn = make_train_epoch(cfg, opt)
+    eval_fn = make_eval_epoch(cfg)
+    eval_fn_test = make_eval_epoch(cfg, collect_embeddings=True) \
+        if eval_node_class else eval_fn
 
     neg_pool = np.unique(stream.dst)
     epoch_secs, losses = [], []
     best = {"val_ap": -1.0}
-    state = init_state(cfg, g.num_nodes)
 
     for ep in range(epochs):
         t0 = time.perf_counter()
-        sampler = RecentNeighborBuffer(g.num_nodes, cfg.num_neighbors)
-        batches = build_batches(tr_stream, cfg, rng, sampler, neg_pool)
+        tr_batches, hist = build_batch_program(
+            tr_stream, cfg, rng, neg_pool=neg_pool)
         state = init_state(cfg, g.num_nodes)  # Alg.2: reset at cycle start
         params, opt_state, state, loss = train_epoch(
-            params, opt_state, state, batches, tables_j, step_fn)
+            params, opt_state, state, tr_batches, tables_j, epoch_fn)
         epoch_secs.append(time.perf_counter() - t0)
         losses.append(loss)
 
         # validation continues from epoch-end memory + neighbor index
-        s_val = sampler.copy()
-        val_batches = build_batches(val_stream, cfg, rng, s_val, neg_pool)
+        val_batches, hist_val = build_batch_program(
+            val_stream, cfg, rng, history=hist, neg_pool=neg_pool)
         res_val = evaluate_stream(params, cfg, state, val_batches,
                                   tables_j, eval_fn)
         if res_val["ap"] > best["val_ap"]:
             ind_mask = (ind[test_stream.src] | ind[test_stream.dst])
-            test_batches = build_batches(
-                test_stream, cfg, rng, s_val.copy(), neg_pool)
+            test_batches, _ = build_batch_program(
+                test_stream, cfg, rng, history=hist_val, neg_pool=neg_pool)
             res_test = evaluate_stream(
                 params, cfg, res_val["state"], test_batches, tables_j,
-                eval_fn, inductive_edge_mask=ind_mask,
+                eval_fn_test, inductive_edge_mask=ind_mask,
                 collect_embeddings=eval_node_class,
             )
             best = {

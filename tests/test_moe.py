@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.models.moe import moe_apply, moe_init
@@ -82,7 +83,8 @@ def test_sharded_moe_matches_pjit_single_device():
         d, f, e, k, t = 16, 24, 4, 2, 64
         p = moe_init(jax.random.PRNGKey(0), d, f, e, "swiglu")
         x = jax.random.normal(jax.random.PRNGKey(1), (t, d))
-        with jax.set_mesh(mesh):
+        from repro import compat
+        with compat.set_mesh(mesh):
             y_ref, aux_ref = moe_apply(p, x, top_k=k, act="swiglu",
                                        dropless=True)
             y_sm, aux_sm = jax.jit(

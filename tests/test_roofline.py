@@ -106,7 +106,8 @@ def test_collectives_counted_in_sharded_program():
             return jax.lax.with_sharding_constraint(
                 jnp.sum(x, axis=0, keepdims=True), P())
         sh = NamedSharding(mesh, P("d", None))
-        with jax.set_mesh(mesh):
+        from repro import compat
+        with compat.set_mesh(mesh):
             c = jax.jit(f, in_shardings=(sh,),
                         out_shardings=NamedSharding(mesh, P())).lower(
                 jax.ShapeDtypeStruct((8, 1024), jnp.float32)).compile()

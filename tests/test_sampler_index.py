@@ -1,0 +1,154 @@
+"""Property tests: the vectorized ``ChronoNeighborIndex`` must be an exact
+drop-in for replaying the old ``RecentNeighborBuffer`` sample/update loop —
+same ids / times / edge indices, same oldest->newest order, same -1 padding —
+including repeated-node batches, tied timestamps, and history continuation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.tig.batching import LocalStream, build_batch_program
+from repro.tig.models import TIGConfig
+from repro.tig.sampler import (
+    ChronoNeighborIndex,
+    NeighborSnapshot,
+    RecentNeighborBuffer,
+)
+
+
+def random_stream(rng, n_nodes, n_edges, t_lo=0, t_hi=10):
+    """Chronological stream with heavy node repetition and tied times."""
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    t = np.sort(rng.integers(t_lo, t_hi, n_edges).astype(np.float64))
+    eidx = np.arange(n_edges, dtype=np.int64)
+    return src, dst, t, eidx
+
+
+def replay_equal(src, dst, t, eidx, n_nodes, k, b,
+                 history=None, buf=None):
+    """Assert batch-by-batch equality of index sampling vs buffer replay."""
+    idx = ChronoNeighborIndex(src, dst, t, eidx, n_nodes, k, b,
+                              history=history)
+    buf = buf or RecentNeighborBuffer(n_nodes, k)
+    nodes = np.arange(n_nodes)
+    for bi in range(max(1, -(-len(src) // b))):
+        lo, hi = bi * b, min((bi + 1) * b, len(src))
+        want = buf.sample(nodes)
+        got = idx.sample(nodes, bi)
+        for w, g, name in zip(want, got, ("ids", "times", "eidx")):
+            np.testing.assert_array_equal(g, w, err_msg=f"batch {bi} {name}")
+        buf.update(src[lo:hi], dst[lo:hi], t[lo:hi], eidx[lo:hi])
+    snap = idx.final_snapshot()
+    ref = buf.snapshot()
+    np.testing.assert_array_equal(snap.nbr, ref.nbr)
+    np.testing.assert_array_equal(snap.time, ref.time)
+    np.testing.assert_array_equal(snap.eidx, ref.eidx)
+    return snap, buf
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_index_equals_ring_buffer_replay(seed):
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(2, 20))
+    n_edges = int(rng.integers(1, 120))
+    k = int(rng.integers(1, 6))
+    b = int(rng.integers(1, 12))
+    src, dst, t, eidx = random_stream(rng, n_nodes, n_edges)
+    replay_equal(src, dst, t, eidx, n_nodes, k, b)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_index_history_continuation(seed):
+    """val/test continuation: an index built with the train-split snapshot
+    must keep matching a ring buffer that never stopped."""
+    rng = np.random.default_rng(100 + seed)
+    n_nodes, k, b = 15, 3, 7
+    src, dst, t, eidx = random_stream(rng, n_nodes, 60)
+    snap, buf = replay_equal(src, dst, t, eidx, n_nodes, k, b)
+    src2, dst2, t2, e2 = random_stream(rng, n_nodes, 40, t_lo=10, t_hi=20)
+    e2 = e2 + len(src)
+    replay_equal(src2, dst2, t2, e2, n_nodes, k, b,
+                 history=snap, buf=buf)
+
+
+def test_index_no_future_leakage():
+    """A sample at batch bi must only contain edges from earlier batches."""
+    rng = np.random.default_rng(7)
+    n_nodes, n_edges, k, b = 10, 80, 4, 9
+    src, dst, t, eidx = random_stream(rng, n_nodes, n_edges)
+    idx = ChronoNeighborIndex(src, dst, t, eidx, n_nodes, k, b)
+    for bi in range(-(-n_edges // b)):
+        _, _, eix = idx.sample(np.arange(n_nodes), bi)
+        real = eix[eix >= 0]
+        assert (real < bi * b).all(), f"future edge leaked into batch {bi}"
+    # before anything streamed: completely empty
+    ids, tms, eix = idx.sample(np.arange(n_nodes), 0)
+    assert (ids == -1).all() and (tms == -1.0).all() and (eix == -1).all()
+
+
+def test_build_batch_program_matches_per_batch_sampling():
+    """The fully pre-staged (steps, ...) program must contain exactly the
+    neighbors the old sample-then-update per-batch loop produced."""
+    rng = np.random.default_rng(3)
+    n_nodes, n_edges, k, b = 18, 75, 4, 10
+    src, dst, t, eidx = random_stream(rng, n_nodes, n_edges)
+    stream = LocalStream(src=src, dst=dst, t=t.astype(np.float64),
+                         eidx=eidx, num_local_nodes=n_nodes)
+    cfg = TIGConfig(flavor="tgn", dim=8, dim_time=4, dim_edge=4, dim_node=4,
+                    num_neighbors=k, batch_size=b)
+    stacked, _ = build_batch_program(stream, cfg, np.random.default_rng(0))
+    steps = stacked["src"].shape[0]
+    assert steps == -(-n_edges // b)
+
+    buf = RecentNeighborBuffer(n_nodes, k)
+    for bi in range(steps):
+        lo, hi = bi * b, min((bi + 1) * b, n_edges)
+        for role in ("src", "dst", "neg"):
+            ids = stacked[role][bi]
+            valid = stacked["valid"][bi]
+            alive = (ids >= 0) & valid
+            clean = np.where(alive, ids, 0)
+            nb, nt, ne = buf.sample(clean)
+            nb[~alive] = -1
+            ne[~alive] = -1
+            np.testing.assert_array_equal(stacked[f"nbr_{role}"][bi], nb)
+            np.testing.assert_array_equal(stacked[f"nbre_{role}"][bi], ne)
+            np.testing.assert_allclose(stacked[f"nbrt_{role}"][bi],
+                                       nt.astype(np.float32))
+        buf.update(src[lo:hi], dst[lo:hi], t[lo:hi], eidx[lo:hi])
+
+
+def test_empty_history_equals_no_history():
+    rng = np.random.default_rng(11)
+    src, dst, t, eidx = random_stream(rng, 8, 30)
+    a = ChronoNeighborIndex(src, dst, t, eidx, 8, 3, 5)
+    b = ChronoNeighborIndex(src, dst, t, eidx, 8, 3, 5,
+                            history=NeighborSnapshot.empty(8, 3))
+    ga = a.sample(np.arange(8), 3)
+    gb = b.sample(np.arange(8), 3)
+    for x, y in zip(ga, gb):
+        np.testing.assert_array_equal(x, y)
+
+
+# ------------------------------------------------------- hypothesis sweep
+# guarded per-test (not importorskip) so the deterministic tests above
+# still run when the optional dependency is absent
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+if st is not None:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           n_nodes=st.integers(1, 25),
+           n_edges=st.integers(0, 90),
+           k=st.integers(1, 7),
+           b=st.integers(1, 13),
+           t_hi=st.integers(1, 8))
+    def test_index_equivalence_property(seed, n_nodes, n_edges, k, b, t_hi):
+        rng = np.random.default_rng(seed)
+        src, dst, t, eidx = random_stream(rng, n_nodes, n_edges, t_hi=t_hi)
+        replay_equal(src, dst, t, eidx, n_nodes, k, b)
