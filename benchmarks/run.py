@@ -13,6 +13,7 @@ import traceback
 
 MODULES = [
     "engine_speedup",
+    "ingest_prefetch",
     "table3_efficiency",
     "table4_linkpred",
     "table5_nodeclass",

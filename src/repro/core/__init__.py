@@ -38,12 +38,18 @@ from repro.core.pac import (
     shuffle_combine,
     sync_shared_memory,
 )
-from repro.core.sep import PartitionResult, sep_partition, streaming_vertex_cut
+from repro.core.sep import (
+    PartitionResult,
+    sep_partition,
+    streaming_vertex_cut,
+    streaming_vertex_cut_reference,
+)
 
 __all__ = [
     "PartitionResult",
     "sep_partition",
     "streaming_vertex_cut",
+    "streaming_vertex_cut_reference",
     "hdrf_partition",
     "greedy_partition",
     "random_partition",

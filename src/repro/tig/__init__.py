@@ -8,6 +8,8 @@ Modules:
   * ``modules``    — MSG/UPD/attention building blocks (raw JAX).
   * ``models``     — Jodie/DyRep/TGN/TIGE as one general architecture.
   * ``batching``   — fixed-shape chronological batch construction.
+  * ``stream``     — out-of-core shard format, chunked JODIE ingestion,
+                     chunked device staging, epoch prefetcher.
   * ``train``      — single-device trainer + evaluation protocol.
   * ``distributed``— PAC device half (vmap simulation / shard_map SPMD).
   * ``evaluation`` — AP / AUROC metrics (numpy).
@@ -15,5 +17,7 @@ Modules:
 
 from repro.tig.graph import TemporalGraph, chronological_split
 from repro.tig.models import TIGConfig
+from repro.tig.stream import EpochPrefetcher, ShardedStream
 
-__all__ = ["TemporalGraph", "chronological_split", "TIGConfig"]
+__all__ = ["TemporalGraph", "chronological_split", "TIGConfig",
+           "ShardedStream", "EpochPrefetcher"]

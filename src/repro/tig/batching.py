@@ -72,6 +72,7 @@ def build_batch_program(
     rng: np.random.Generator,
     history: Optional[NeighborSnapshot] = None,
     neg_pool: Optional[np.ndarray] = None,
+    index: Optional[ChronoNeighborIndex] = None,
 ) -> tuple[dict, NeighborSnapshot]:
     """Fully pre-staged epoch plan: a (steps, ...) batch pytree.
 
@@ -80,6 +81,10 @@ def build_batch_program(
         (e.g. train -> val continuation); defaults to an empty history.
       neg_pool: candidate local ids for negative sampling (defaults to the
         stream's destination nodes — the JODIE/TGN convention).
+      index: pre-built neighbor index for this stream (e.g. the chunked
+        out-of-core build, or one reused across epochs); mutually
+        exclusive with ``history`` and validated against the stream/cfg
+        shape.  Defaults to a fresh one-shot build.
 
     Returns ``(batches, final_history)`` where ``batches`` maps each
     ``models.step_loss`` key to a (steps, batch, ...) array and
@@ -91,9 +96,22 @@ def build_batch_program(
     n_edges = stream.num_edges
     steps = max(1, -(-n_edges // b))
 
-    index = ChronoNeighborIndex(
-        stream.src, stream.dst, stream.t, stream.eidx,
-        stream.num_local_nodes, k, b, history=history)
+    if index is None:
+        index = ChronoNeighborIndex(
+            stream.src, stream.dst, stream.t, stream.eidx,
+            stream.num_local_nodes, k, b, history=history)
+    else:
+        if history is not None:
+            raise ValueError("pass history to the index build, not both")
+        if (index.num_nodes, index.k, index.batch_size) != \
+                (stream.num_local_nodes, k, b):
+            raise ValueError("index shape does not match stream/cfg")
+        if index.num_batches != steps:
+            # a different-length stream would alias into neighboring nodes'
+            # (node, batch) key ranges and sample silently-wrong neighbors
+            raise ValueError(
+                f"index covers {index.num_batches} batches, stream has "
+                f"{steps}")
 
     src = _padded(stream.src, steps, b, -1).astype(np.int32)
     dst = _padded(stream.dst, steps, b, -1).astype(np.int32)

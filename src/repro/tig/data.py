@@ -55,6 +55,51 @@ PRESETS: dict[str, dict] = {
 }
 
 
+def _rewire_repeats_reference(
+    users: np.ndarray, items: np.ndarray, repeat: np.ndarray
+) -> np.ndarray:
+    """Per-edge ``prev_item`` chain (the original O(E) interpreted loop;
+    kept as the parity oracle of ``_rewire_repeats``)."""
+    out = items.copy()
+    prev_item: dict[int, int] = {}
+    for e in range(len(users)):
+        u = int(users[e])
+        if repeat[e] and u in prev_item:
+            out[e] = prev_item[u]
+        prev_item[u] = out[e]
+    return out
+
+
+def _rewire_repeats(
+    users: np.ndarray, items: np.ndarray, repeat: np.ndarray
+) -> np.ndarray:
+    """Vectorized repeat-rewire: each repeat edge takes the item of its
+    user's most recent NON-repeat (anchor) edge.
+
+    The sequential chain ``prev_item[u]`` always resolves to the item of
+    the user's last anchor edge (first occurrence, or ``~repeat``): repeat
+    edges copy the chain value and anchors reset it.  So a stable sort by
+    user followed by a per-group forward-fill of anchor positions
+    (``np.maximum.accumulate`` — safe across group boundaries because a
+    group's first row is always an anchor) reproduces the loop
+    bit-identically with no per-edge Python.
+    """
+    ne = len(users)
+    if ne == 0:
+        return items.copy()
+    order = np.argsort(users, kind="stable")
+    u_s = users[order]
+    first = np.empty(ne, dtype=bool)
+    first[0] = True
+    first[1:] = u_s[1:] != u_s[:-1]
+    anchor = first | ~repeat[order]
+    fill = np.maximum.accumulate(
+        np.where(anchor, np.arange(ne, dtype=np.int64), 0))
+    out = np.empty_like(items)
+    out[order] = items[order][fill]
+    return out
+
+
 def synthetic_tig(
     name: str = "tiny",
     *,
@@ -87,13 +132,8 @@ def synthetic_tig(
 
     # temporal locality: rewire a fraction of interactions to the user's
     # previous item (generates the repeat-interaction bursts of real logs).
-    prev_item = np.full(nu, -1, dtype=np.int64)
     repeat = rng.uniform(size=ne) < repeat_prob
-    for e in range(ne):
-        u = users[e]
-        if repeat[e] and prev_item[u] >= 0:
-            items[e] = prev_item[u]
-        prev_item[u] = items[e]
+    items = _rewire_repeats(users, items, repeat)
 
     src = users.astype(np.int64)
     dst = (nu + items).astype(np.int64)
@@ -131,13 +171,22 @@ def load_jodie_csv(
         user_id, item_id, timestamp, state_label, feat_0, ..., feat_k
 
     Item ids are offset to live after user ids (bipartite convention).
+    Parsing goes through the chunked block reader (``repro.tig.stream``),
+    which tolerates integer timestamps, missing label columns, and
+    ragged/header-only feature columns (short rows zero-padded to the
+    sniffed width — never a silent ``(E, 0)`` feature slice).  For streams
+    too large to materialize, use ``stream.write_jodie_shards`` instead.
     """
-    raw = np.genfromtxt(path, delimiter=",", skip_header=1)
-    users = raw[:, 0].astype(np.int64)
-    items = raw[:, 1].astype(np.int64)
-    t = raw[:, 2].astype(np.float64)
-    labels = raw[:, 3].astype(np.int64)
-    feats = raw[:, 4:].astype(np.float32)
+    from repro.tig.stream import iter_jodie_blocks
+
+    cols: list[tuple] = list(iter_jodie_blocks(path))
+    if not cols:
+        raise ValueError(f"{path}: no data rows")
+    users = np.concatenate([c[0] for c in cols])
+    items = np.concatenate([c[1] for c in cols])
+    t = np.concatenate([c[2] for c in cols])
+    labels = np.concatenate([c[3] for c in cols])
+    feats = np.concatenate([c[4] for c in cols])
     if feats.shape[1] == 0:
         feats = np.zeros((len(users), 1), dtype=np.float32)
     nu = int(users.max()) + 1

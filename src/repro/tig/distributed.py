@@ -54,7 +54,8 @@ from repro.tig.batching import LocalStream, build_batch_program
 from repro.tig.engine import scan_train_epoch
 from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state
-from repro.tig.train import time_scale_of
+from repro.tig.stream import EpochPrefetcher
+from repro.tig.train import epoch_rng, time_scale_of
 
 __all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "pac_train",
            "PACResult"]
@@ -331,15 +332,20 @@ def pac_train(
     shuffle_parts: bool = True,
     sync_mode: Literal["latest", "mean"] = "latest",
     mesh: Optional[Mesh] = None,
+    prefetch: bool = True,
 ) -> PACResult:
     """Train a TIG model with SEP partitions + PAC (the paper's pipeline).
 
     ``partition`` may have more parts than devices (|P| > N): parts are then
     shuffle-combined into N super-partitions before every epoch (Fig.7).
+
+    With ``prefetch`` (the default) cycle e+1's host planning — shuffle-
+    combine, localization, batch grids — and its host->device transfer run
+    on a worker thread while cycle e's scan executes; per-epoch RNG streams
+    keep results bit-identical to serial planning.
     """
     from repro.optim import adamw
 
-    rng = np.random.default_rng(seed)
     small_parts = partition.node_lists()
     time_scale = time_scale_of(g_train.t)
 
@@ -347,33 +353,43 @@ def pac_train(
     opt = adamw(lr=lr, max_grad_norm=1.0)
     opt_state = opt.init(params)
 
-    all_losses = []
-    epoch_fn = None
-    last_plan = None
-    compiled_key = None
-    for ep in range(epochs):
+    def build(ep: int) -> EpochPlan:
+        rng_ep = epoch_rng(seed, ep, 11)
         if shuffle_parts and len(small_parts) > num_devices:
-            node_lists = shuffle_combine(small_parts, num_devices, rng)
+            node_lists = shuffle_combine(small_parts, num_devices, rng_ep)
         elif len(small_parts) == num_devices:
             node_lists = small_parts
         else:
             node_lists = shuffle_combine(
                 small_parts, num_devices, np.random.default_rng(seed))
-        plan = plan_epoch(g_train, node_lists, partition.shared_nodes,
-                          cfg, rng, time_scale=time_scale)
+        return plan_epoch(g_train, node_lists, partition.shared_nodes,
+                          cfg, rng_ep, time_scale=time_scale)
+
+    def to_device(plan: EpochPlan):
+        return plan, (
+            {k: jnp.asarray(v) for k, v in plan.batches.items()},
+            jnp.asarray(plan.n_batches),
+            jnp.asarray(plan.nfeat_local),
+            jnp.asarray(plan.efeat_local),
+            jnp.asarray(plan.shared_local),
+        )
+
+    pf = EpochPrefetcher(build, epochs, to_device=to_device,
+                         enabled=prefetch)
+    all_losses = []
+    epoch_fn = None
+    last_plan = None
+    compiled_key = None
+    for ep in range(epochs):
+        plan, dev = pf.get(ep)
         key = (plan.steps, plan.capacity, plan.edge_capacity)
         if epoch_fn is None or key != compiled_key:
             epoch_fn = make_pac_epoch(
                 cfg, opt, plan.steps, plan.capacity, mesh=mesh,
                 sync_mode=sync_mode)
             compiled_key = key
-        batches_j = {k: jnp.asarray(v) for k, v in plan.batches.items()}
         params, opt_state, states, losses = epoch_fn(
-            params, opt_state, batches_j,
-            jnp.asarray(plan.n_batches),
-            jnp.asarray(plan.nfeat_local),
-            jnp.asarray(plan.efeat_local),
-            jnp.asarray(plan.shared_local))
+            params, opt_state, *dev)
         all_losses.append(np.asarray(losses))
         last_plan = plan
 

@@ -26,6 +26,7 @@ from repro.tig.batching import (
     stack_batches,
 )
 from repro.tig.engine import make_eval_epoch, make_train_epoch
+from repro.tig.stream import EpochPrefetcher
 from repro.tig.evaluation import average_precision, roc_auc
 from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state, step_loss
@@ -37,8 +38,18 @@ __all__ = [
     "train_epoch",
     "evaluate_stream",
     "train_single",
+    "train_sharded",
     "train_classifier_head",
+    "epoch_rng",
 ]
+
+
+def epoch_rng(seed: int, epoch: int, role: int = 0) -> np.random.Generator:
+    """Independent generator per (seed, epoch, role) — epoch plans drawn
+    from dedicated streams, so prefetched (out-of-order) planning produces
+    bit-identical draws to serial planning."""
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, role, epoch]))
 
 
 def time_scale_of(t: np.ndarray) -> float:
@@ -172,6 +183,92 @@ def evaluate_stream(
         else:
             out["labels"] = None
     return out
+
+
+@dataclasses.dataclass
+class ShardedResult:
+    losses: list[float]
+    epoch_seconds: list[float]
+    params: dict
+    state: dict
+    cfg: TIGConfig
+
+
+def train_sharded(
+    shards,
+    cfg: TIGConfig,
+    *,
+    epochs: int = 2,
+    lr: float = 1e-3,
+    seed: int = 0,
+    prefetch: bool = True,
+) -> ShardedResult:
+    """Out-of-core training over a ``tig-shards-v1`` stream (whole stream
+    as the train split; quality evaluation stays with ``train_single``).
+
+    The full data plane is chunked: id columns materialize at 8 bytes/edge,
+    the edge-feature table is staged shard-by-shard into a donated device
+    buffer (the host never holds all rows), the temporal neighbor index is
+    built with the chunked T-CSR merge, and epoch plans are prefetched on
+    a worker thread while the previous epoch's scan runs.
+    """
+    from repro.tig.sampler import ChronoNeighborIndex
+    from repro.tig.stream import stage_device_tables
+
+    src = shards.column("src")
+    dst = shards.column("dst")
+    t = shards.column("t")
+    scale = time_scale_of(t)
+    stream = LocalStream(
+        src=src.astype(np.int64),
+        dst=dst.astype(np.int64),
+        t=t / scale,
+        eidx=np.arange(len(src), dtype=np.int64),
+        num_local_nodes=shards.num_nodes,
+        labels=None,
+    )
+
+    def scaled_chunks():
+        for c_src, c_dst, c_t, c_eidx in shards.edge_chunks():
+            yield c_src, c_dst, c_t / scale, c_eidx
+
+    # index is epoch-invariant (same stream, no history): chunked build once
+    index = ChronoNeighborIndex.from_chunks(
+        scaled_chunks, shards.num_nodes, cfg.num_neighbors, cfg.batch_size)
+
+    tables_j = stage_device_tables(shards)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw(lr=lr, max_grad_norm=1.0)
+    opt_state = opt.init(params)
+    epoch_fn = make_train_epoch(cfg, opt)
+    neg_pool = np.unique(stream.dst)
+
+    pf = EpochPrefetcher(
+        lambda ep: build_batch_program(
+            stream, cfg, epoch_rng(seed, ep, 1), neg_pool=neg_pool,
+            index=index)[0],
+        epochs,
+        to_device=_device_batches,
+        enabled=prefetch,
+    )
+    losses, epoch_secs = [], []
+    state = None
+    for ep in range(epochs):
+        t0 = time.perf_counter()
+        batches = pf.get(ep)
+        state = init_state(cfg, shards.num_nodes)
+        params, opt_state, state, loss = train_epoch(
+            params, opt_state, state, batches, tables_j, epoch_fn)
+        epoch_secs.append(time.perf_counter() - t0)
+        losses.append(loss)
+
+    return ShardedResult(
+        losses=losses,
+        epoch_seconds=epoch_secs,
+        params=params,
+        state=state,
+        cfg=cfg,
+    )
 
 
 def train_classifier_head(
@@ -316,15 +413,18 @@ def train_single(
     lr: float = 1e-3,
     seed: int = 0,
     eval_node_class: bool = False,
+    prefetch: bool = True,
 ) -> SingleResult:
     """The paper's single-device baseline trainer: chronological 70/15/15
     split, memory reset per epoch, val/test continue the epoch-end memory.
 
     Each epoch is one host-planning pass (vectorized neighbor index + batch
-    grid) followed by one scanned device program."""
+    grid) followed by one scanned device program.  With ``prefetch`` (the
+    default) epoch e+1's plan is built — and moved to device — on a worker
+    thread while epoch e's scan runs; per-epoch RNG streams make the
+    result bit-identical to serial planning."""
     from repro.tig.graph import chronological_split
 
-    rng = np.random.default_rng(seed)
     train_g, val_g, test_g, inductive_nodes = chronological_split(g)
     ind = np.zeros(g.num_nodes, dtype=bool)
     ind[inductive_nodes] = True
@@ -358,10 +458,18 @@ def train_single(
     epoch_secs, losses = [], []
     best = {"val_ap": -1.0}
 
+    # double-buffered host planning: epoch e+1's train plan is built and
+    # device-put on a worker thread while epoch e's scan executes.
+    pf = EpochPrefetcher(
+        lambda ep: build_batch_program(
+            tr_stream, cfg, epoch_rng(seed, ep, 1), neg_pool=neg_pool),
+        epochs,
+        to_device=lambda plan: (_device_batches(plan[0]), plan[1]),
+        enabled=prefetch,
+    )
     for ep in range(epochs):
         t0 = time.perf_counter()
-        tr_batches, hist = build_batch_program(
-            tr_stream, cfg, rng, neg_pool=neg_pool)
+        tr_batches, hist = pf.get(ep)
         state = init_state(cfg, g.num_nodes)  # Alg.2: reset at cycle start
         params, opt_state, state, loss = train_epoch(
             params, opt_state, state, tr_batches, tables_j, epoch_fn)
@@ -370,13 +478,15 @@ def train_single(
 
         # validation continues from epoch-end memory + neighbor index
         val_batches, hist_val = build_batch_program(
-            val_stream, cfg, rng, history=hist, neg_pool=neg_pool)
+            val_stream, cfg, epoch_rng(seed, ep, 2), history=hist,
+            neg_pool=neg_pool)
         res_val = evaluate_stream(params, cfg, state, val_batches,
                                   tables_j, eval_fn)
         if res_val["ap"] > best["val_ap"]:
             ind_mask = (ind[test_stream.src] | ind[test_stream.dst])
             test_batches, _ = build_batch_program(
-                test_stream, cfg, rng, history=hist_val, neg_pool=neg_pool)
+                test_stream, cfg, epoch_rng(seed, ep, 3),
+                history=hist_val, neg_pool=neg_pool)
             res_test = evaluate_stream(
                 params, cfg, res_val["state"], test_batches, tables_j,
                 eval_fn_test, inductive_edge_mask=ind_mask,

@@ -152,3 +152,83 @@ if st is not None:
         rng = np.random.default_rng(seed)
         src, dst, t, eidx = random_stream(rng, n_nodes, n_edges, t_hi=t_hi)
         replay_equal(src, dst, t, eidx, n_nodes, k, b)
+
+
+# ---------------------------------------------------- chunked T-CSR build
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_from_chunks_equals_one_shot(seed):
+    """The out-of-core counting-sort build must produce the one-shot
+    constructor's arrays verbatim, for arbitrary chunk boundaries, tied
+    timestamps, and history continuation."""
+    rng = np.random.default_rng(seed)
+    n, e = int(rng.integers(3, 40)), int(rng.integers(0, 800))
+    src, dst, t, eidx = random_stream(rng, n, e)
+    k = int(rng.integers(1, 6))
+    b = int(rng.integers(1, 50))
+    hist = None
+    if seed % 2:
+        buf = RecentNeighborBuffer(n, k)
+        hs, hd, ht, he = random_stream(rng, n, 64, t_lo=-100, t_hi=-50)
+        buf.update(hs, hd, ht, he)
+        hist = buf.snapshot()
+    one = ChronoNeighborIndex(src, dst, t, eidx, n, k, b, history=hist)
+    n_chunks = int(rng.integers(1, 7))
+    cuts = np.sort(rng.integers(0, e + 1, n_chunks - 1)).tolist()
+    bounds = [0, *cuts, e]
+    chunks = [(src[a:c], dst[a:c], t[a:c], eidx[a:c])
+              for a, c in zip(bounds[:-1], bounds[1:])]
+    two = ChronoNeighborIndex.from_chunks(chunks, n, k, b, history=hist)
+    for f in ("_nbr", "_t", "_e", "_bkey", "_indptr"):
+        np.testing.assert_array_equal(
+            getattr(one, f), getattr(two, f), err_msg=f)
+    assert one.num_batches == two.num_batches
+    q = rng.integers(0, n, 32)
+    b_of = rng.integers(0, one.num_batches + 1, 32)
+    for a_, b_ in zip(one.sample(q, b_of), two.sample(q, b_of)):
+        np.testing.assert_array_equal(a_, b_)
+
+
+def test_from_chunks_callable_factory():
+    """A zero-arg chunk factory (the out-of-core path) is re-iterated for
+    each pass and matches the sequence form."""
+    rng = np.random.default_rng(9)
+    src, dst, t, eidx = random_stream(rng, 20, 300)
+    chunks = [(src[a:a + 77], dst[a:a + 77], t[a:a + 77], eidx[a:a + 77])
+              for a in range(0, 300, 77)]
+    a = ChronoNeighborIndex.from_chunks(chunks, 20, 4, 13)
+    b = ChronoNeighborIndex.from_chunks(lambda: iter(chunks), 20, 4, 13)
+    for f in ("_nbr", "_t", "_e", "_bkey", "_indptr"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+
+
+def test_build_batch_program_accepts_prebuilt_index():
+    rng = np.random.default_rng(4)
+    src, dst, t, eidx = random_stream(rng, 25, 400)
+    cfg = TIGConfig(dim=8, dim_time=4, dim_edge=4, dim_node=4,
+                    num_neighbors=3, batch_size=32)
+    stream = LocalStream(src=src, dst=dst, t=t, eidx=eidx,
+                         num_local_nodes=25)
+    idx = ChronoNeighborIndex.from_chunks(
+        [(src, dst, t, eidx)], 25, cfg.num_neighbors, cfg.batch_size)
+    a, _ = build_batch_program(stream, cfg, np.random.default_rng(0))
+    b, _ = build_batch_program(stream, cfg, np.random.default_rng(0),
+                               index=idx)
+    for key in a:
+        np.testing.assert_array_equal(a[key], b[key], err_msg=key)
+    with pytest.raises(ValueError):
+        build_batch_program(stream, cfg, np.random.default_rng(0),
+                            index=idx, history=NeighborSnapshot.empty(25, 3))
+
+
+def test_from_chunks_accepts_one_shot_generator():
+    """Regression: a plain generator must not leave the index uninitialized
+    (both counting passes need every chunk)."""
+    rng = np.random.default_rng(12)
+    src, dst, t, eidx = random_stream(rng, 15, 200)
+    chunks = [(src[a:a + 64], dst[a:a + 64], t[a:a + 64], eidx[a:a + 64])
+              for a in range(0, 200, 64)]
+    a = ChronoNeighborIndex.from_chunks(chunks, 15, 3, 10)
+    b = ChronoNeighborIndex.from_chunks((c for c in chunks), 15, 3, 10)
+    for f in ("_nbr", "_t", "_e", "_bkey", "_indptr"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))

@@ -1,0 +1,212 @@
+"""Tests for the chunked streaming data plane (repro.tig.stream):
+shard roundtrips, out-of-core JODIE ingestion, chunked device staging,
+the epoch prefetcher, and the synthetic-generator rewire parity."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.tig.batching import make_tables
+from repro.tig.data import (
+    _rewire_repeats,
+    _rewire_repeats_reference,
+    load_jodie_csv,
+    synthetic_tig,
+)
+from repro.tig.stream import (
+    EpochPrefetcher,
+    ShardedStream,
+    iter_jodie_blocks,
+    stage_device_tables,
+    write_graph_shards,
+    write_jodie_shards,
+)
+
+JODIE_CSV = """user_id,item_id,timestamp,state_label,f0,f1
+0,0,1,0,0.5,1.5
+1,0,2,0,0.25
+2,1,3,1
+1,2,4,,0.75,2.5,9.9
+0,1,10,0,1.0,2.0,3.0
+"""
+
+NO_FEAT_CSV = """user_id,item_id,timestamp,state_label
+0,0,1,0
+1,1,2.5,1
+0,1,3,0
+"""
+
+
+# ------------------------------------------------------------- shard format
+
+def test_graph_shard_roundtrip(tmp_path):
+    g = synthetic_tig("tiny", seed=3)
+    sh = write_graph_shards(g, str(tmp_path / "tiny"), shard_edges=257)
+    assert sh.num_shards == -(-g.num_edges // 257)
+    assert sh.num_edges == g.num_edges
+    re = ShardedStream.open(str(tmp_path / "tiny"))
+    g2 = re.as_graph()
+    np.testing.assert_array_equal(g2.src, g.src)
+    np.testing.assert_array_equal(g2.dst, g.dst)
+    np.testing.assert_array_equal(g2.t, g.t)
+    np.testing.assert_array_equal(g2.labels, g.labels)
+    np.testing.assert_allclose(g2.edge_feat, g.edge_feat)
+    assert g2.num_nodes == g.num_nodes
+    # columns and chunks are consistent with the arrays
+    np.testing.assert_array_equal(re.column("src"), g.src)
+    chunks = list(re.edge_chunks())
+    assert sum(len(c[0]) for c in chunks) == g.num_edges
+    np.testing.assert_array_equal(
+        np.concatenate([c[3] for c in chunks]), np.arange(g.num_edges))
+    # shard loads are memory-mapped, not copies
+    assert isinstance(re.load(0, "efeat"), np.memmap)
+
+
+def test_open_rejects_non_shard_dir(tmp_path):
+    os.makedirs(tmp_path / "x", exist_ok=True)
+    with open(tmp_path / "x" / "meta.json", "w") as f:
+        f.write('{"format": "something-else"}')
+    with pytest.raises(ValueError):
+        ShardedStream.open(str(tmp_path / "x"))
+
+
+# --------------------------------------------------------- JODIE ingestion
+
+def test_load_jodie_csv_ragged_and_int_timestamps(tmp_path):
+    """Regression: ragged feature rows, empty labels, and integer
+    timestamps must parse — and never produce an (E, 0) feature slice."""
+    p = tmp_path / "ml_x.csv"
+    p.write_text(JODIE_CSV)
+    g = load_jodie_csv(str(p), d_n=8)
+    assert g.num_edges == 5
+    # width = widest data row (3 features); short rows zero-padded
+    assert g.edge_feat.shape == (5, 3)
+    np.testing.assert_allclose(
+        g.edge_feat[:4],
+        [[0.5, 1.5, 0.0], [0.25, 0.0, 0.0], [0.0, 0.0, 0.0],
+         [0.75, 2.5, 9.9]])
+    assert g.labels.tolist() == [0, 0, 1, 0, 0]
+    assert g.t.tolist() == [1.0, 2.0, 3.0, 4.0, 10.0]
+    # bipartite offset: items live after the 3 users
+    assert g.src.tolist() == [0, 1, 2, 1, 0]
+    assert g.dst.tolist() == [3, 3, 4, 5, 4]
+    assert g.node_feat.shape == (6, 8)
+
+
+def test_load_jodie_csv_no_feature_columns(tmp_path):
+    p = tmp_path / "ml_nofeat.csv"
+    p.write_text(NO_FEAT_CSV)
+    g = load_jodie_csv(str(p))
+    assert g.edge_feat.shape == (3, 1)          # zero column, never (E, 0)
+    np.testing.assert_array_equal(g.edge_feat, 0.0)
+    assert g.t.tolist() == [1.0, 2.5, 3.0]
+
+
+def test_write_jodie_shards_matches_in_memory_loader(tmp_path):
+    p = tmp_path / "ml_x.csv"
+    p.write_text(JODIE_CSV)
+    sh = write_jodie_shards(str(p), str(tmp_path / "shards"), shard_edges=2)
+    assert sh.num_shards == 3                   # 2 + 2 + 1 rows
+    g_mem = load_jodie_csv(str(p), d_n=sh.dim_node)
+    g_sh = sh.as_graph()
+    np.testing.assert_array_equal(g_sh.src, g_mem.src)
+    np.testing.assert_array_equal(g_sh.dst, g_mem.dst)
+    np.testing.assert_array_equal(g_sh.t, g_mem.t)
+    np.testing.assert_array_equal(g_sh.labels, g_mem.labels)
+    np.testing.assert_allclose(g_sh.edge_feat, g_mem.edge_feat)
+    assert g_sh.num_nodes == g_mem.num_nodes
+
+
+def test_write_jodie_shards_rejects_unsorted(tmp_path):
+    p = tmp_path / "ml_bad.csv"
+    p.write_text("u,i,ts,l\n0,0,5,0\n1,1,4,0\n")
+    with pytest.raises(ValueError, match="non-decreasing"):
+        write_jodie_shards(str(p), str(tmp_path / "bad"))
+
+
+def test_iter_jodie_blocks_block_sizes(tmp_path):
+    p = tmp_path / "ml_x.csv"
+    p.write_text(JODIE_CSV)
+    blocks = list(iter_jodie_blocks(str(p), block_rows=2))
+    assert [len(b[0]) for b in blocks] == [2, 2, 1]
+
+
+# --------------------------------------------------------- device staging
+
+def test_stage_device_tables_matches_make_tables(tmp_path):
+    g = synthetic_tig("tiny", seed=5)
+    sh = write_graph_shards(g, str(tmp_path / "s"), shard_edges=123)
+    staged = stage_device_tables(sh)
+    ref = make_tables(g.edge_feat, np.zeros_like(g.node_feat))
+    np.testing.assert_allclose(np.asarray(staged["efeat"]), ref["efeat"],
+                               atol=0)
+    assert staged["nfeat"].shape == (g.num_nodes + 1, g.dim_node)
+    np.testing.assert_array_equal(np.asarray(staged["nfeat"]), 0.0)
+
+
+# ------------------------------------------------------------- prefetcher
+
+def test_prefetcher_order_and_results():
+    built = []
+
+    def build(ep):
+        built.append(ep)
+        return ep * 10
+
+    pf = EpochPrefetcher(build, 4, to_device=lambda x: x + 1)
+    got = [pf.get(ep) for ep in range(4)]
+    assert got == [1, 11, 21, 31]
+    assert built == [0, 1, 2, 3]                # serial submission order
+
+
+def test_prefetcher_disabled_inline():
+    pf = EpochPrefetcher(lambda ep: ep, 3, enabled=False)
+    assert [pf.get(e) for e in range(3)] == [0, 1, 2]
+
+
+def test_prefetcher_propagates_exceptions():
+    def build(ep):
+        if ep == 1:
+            raise RuntimeError("boom")
+        return ep
+
+    pf = EpochPrefetcher(build, 3)
+    assert pf.get(0) == 0
+    with pytest.raises(RuntimeError, match="boom"):
+        pf.get(1)
+
+
+# ------------------------------------------------- synthetic rewire parity
+
+def test_rewire_repeats_bit_identical():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        ne = int(rng.integers(1, 3000))
+        nu = int(rng.integers(1, 60))
+        users = rng.integers(0, nu, ne)
+        items = rng.integers(0, 500, ne)
+        repeat = rng.random(ne) < rng.random()
+        ref = _rewire_repeats_reference(users, items.copy(), repeat)
+        got = _rewire_repeats(users, items, repeat)
+        np.testing.assert_array_equal(ref, got)
+
+
+def test_rewire_repeats_edge_cases():
+    empty = _rewire_repeats(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                            np.zeros(0, bool))
+    assert len(empty) == 0
+    # all repeats: everything sticks to the user's first item
+    users = np.zeros(5, np.int64)
+    items = np.arange(5)
+    out = _rewire_repeats(users, items, np.ones(5, bool))
+    np.testing.assert_array_equal(out, np.zeros(5))
+
+
+def test_write_jodie_shards_without_label_column(tmp_path):
+    """Regression: a 3-column export must not fabricate all-zero labels."""
+    p = tmp_path / "ml_min.csv"
+    p.write_text("user_id,item_id,timestamp\n0,0,1\n1,0,2\n0,1,3\n")
+    sh = write_jodie_shards(str(p), str(tmp_path / "min"))
+    assert not sh.has_labels
+    assert sh.as_graph().labels is None
