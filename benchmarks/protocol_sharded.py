@@ -1,0 +1,79 @@
+"""Sharded quality path end-to-end: ingest -> 70/15/15 split views ->
+val-selected out-of-core training -> paper-table metrics, all from a
+``tig-shards-v1`` directory — plus the in-memory parity check.
+
+``train_sharded(protocol=True)`` must report val/test transductive +
+inductive AP/AUROC without materializing the full edge-feature table on
+host, and its numbers must equal ``evaluate_params`` on the equivalent
+in-memory graph (identical batch plan => identical metrics).  The CI
+sharded-protocol smoke step runs this module in fast mode.
+
+Rows go to ``experiments/bench/protocol_sharded.csv``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.tig.data import synthetic_tig
+from repro.tig.models import TIGConfig
+from repro.tig.stream import write_graph_shards
+from repro.tig.train import evaluate_params, train_sharded
+
+PARITY_KEYS = ("val_ap", "val_auc", "val_ap_inductive", "test_ap",
+               "test_auc", "test_ap_inductive", "test_auc_inductive")
+
+
+def run(fast: bool = True):
+    name, epochs = ("tiny", 2) if fast else ("small", 4)
+    g = synthetic_tig(name, seed=1)
+    cfg = TIGConfig(dim=16, dim_time=8, dim_edge=g.dim_edge,
+                    dim_node=g.dim_node, num_neighbors=4, batch_size=128)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        sh = write_graph_shards(g, os.path.join(tmp, "sh"), shard_edges=499)
+        t0 = time.perf_counter()
+        res = train_sharded(sh, cfg, epochs=epochs, protocol=True,
+                            patience=2, seed=0,
+                            eval_node_class=not fast)
+        t_total = time.perf_counter() - t0
+        ev = evaluate_params(sh.as_graph(), cfg, res.params, seed=0,
+                             eval_node_class=not fast)
+
+    nan_mismatch = [k for k in PARITY_KEYS
+                    if np.isnan(res.metrics[k]) != np.isnan(ev[k])]
+    diffs = [abs(res.metrics[k] - ev[k]) for k in PARITY_KEYS
+             if np.isfinite(res.metrics[k]) and np.isfinite(ev[k])]
+    parity = float(np.max(diffs)) if diffs else 0.0
+    assert not nan_mismatch and parity == 0.0, \
+        f"sharded/in-memory protocol parity broken: max diff {parity}, " \
+        f"NaN mismatches {nan_mismatch}"
+
+    m = res.metrics
+    rows = [{
+        "dataset": name,
+        "edges": g.num_edges,
+        "epochs_run": len(res.losses),
+        "best_epoch": res.best_epoch,
+        "val_ap": m["val_ap"],
+        "val_auc": m["val_auc"],
+        "val_ap_inductive": m["val_ap_inductive"],
+        "test_ap": m["test_ap"],
+        "test_auc": m["test_auc"],
+        "test_ap_inductive": m["test_ap_inductive"],
+        "test_auc_inductive": m["test_auc_inductive"],
+        "node_auroc": m["node_auroc"],
+        "parity_max_abs_diff": parity,
+        "total_s": t_total,
+    }]
+    emit("protocol_sharded", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -14,6 +14,7 @@ import traceback
 MODULES = [
     "engine_speedup",
     "ingest_prefetch",
+    "protocol_sharded",
     "table3_efficiency",
     "table4_linkpred",
     "table5_nodeclass",

@@ -1,9 +1,17 @@
 """Paper Tab.IV — link-prediction AP (transductive + inductive) across
-top_k settings, HDRF, and the no-partitioning baseline, per backbone."""
+top_k settings, HDRF, the no-partitioning baseline, and the out-of-core
+sharded quality path, per backbone.
+
+Every row reports through the same protocol driver
+(``repro.tig.protocol.run_protocol``): PAC-trained rows route via
+``pac_train(eval_graph=...)``, the single-device row via ``train_single``,
+and the sharded row via ``train_sharded(protocol=True)`` — trained and
+evaluated directly from a ``tig-shards-v1`` directory."""
 
 from __future__ import annotations
 
-import numpy as np
+import os
+import tempfile
 
 from benchmarks.common import emit
 from repro.core import hdrf_partition, sep_partition
@@ -11,7 +19,8 @@ from repro.tig.data import synthetic_tig
 from repro.tig.distributed import pac_train
 from repro.tig.graph import chronological_split
 from repro.tig.models import TIGConfig
-from repro.tig.train import evaluate_params, train_single
+from repro.tig.stream import write_graph_shards
+from repro.tig.train import train_sharded, train_single
 
 
 def run(fast: bool = True, dataset: str = "small"):
@@ -31,21 +40,28 @@ def run(fast: bool = True, dataset: str = "small"):
             part = sep_partition(train_g.src, train_g.dst, train_g.t,
                                  g.num_nodes, n_dev, k=k)
             res = pac_train(train_g, part, cfg, num_devices=n_dev,
-                            epochs=epochs)
-            ev = evaluate_params(g, cfg, res.params)
+                            epochs=epochs, eval_graph=g)
             rows.append({"backbone": flavor, "setting": label,
-                         "ap_transductive": ev["test_ap"],
-                         "ap_inductive": ev["test_ap_inductive"]})
+                         "ap_transductive": res.metrics["test_ap"],
+                         "ap_inductive": res.metrics["test_ap_inductive"]})
         hd = hdrf_partition(train_g.src, train_g.dst, g.num_nodes, n_dev)
-        res = pac_train(train_g, hd, cfg, num_devices=n_dev, epochs=epochs)
-        ev = evaluate_params(g, cfg, res.params)
+        res = pac_train(train_g, hd, cfg, num_devices=n_dev, epochs=epochs,
+                        eval_graph=g)
         rows.append({"backbone": flavor, "setting": "hdrf",
-                     "ap_transductive": ev["test_ap"],
-                     "ap_inductive": ev["test_ap_inductive"]})
+                     "ap_transductive": res.metrics["test_ap"],
+                     "ap_inductive": res.metrics["test_ap_inductive"]})
         single = train_single(g, cfg, epochs=epochs)
         rows.append({"backbone": flavor, "setting": "w/o partitioning",
                      "ap_transductive": single.test_ap,
                      "ap_inductive": single.test_ap_inductive})
+        # quality path from shards: same protocol, no in-memory graph
+        with tempfile.TemporaryDirectory() as tmp:
+            sh = write_graph_shards(g, os.path.join(tmp, "sh"))
+            shd = train_sharded(sh, cfg, epochs=epochs, protocol=True,
+                                patience=max(1, epochs - 1))
+        rows.append({"backbone": flavor, "setting": "sharded (out-of-core)",
+                     "ap_transductive": shd.metrics["test_ap"],
+                     "ap_inductive": shd.metrics["test_ap_inductive"]})
     emit("table4_linkpred", rows)
     return rows
 

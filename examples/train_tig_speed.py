@@ -3,16 +3,21 @@ DGraphFin-shaped graph, a few hundred training steps, with all the paper's
 moving parts exercised: SEP hub selection + streaming assignment, partition
 shuffling every epoch, Alg.2 loop-within-epoch with memory backup/restore,
 DDP gradient sync, shared-node memory synchronization (latest-timestamp),
-checkpointing, and downstream evaluation.
+checkpointing, and downstream evaluation through the unified protocol
+driver (``repro.tig.protocol.run_protocol``).
 
-    PYTHONPATH=src python examples/train_tig_speed.py [--big]
+    PYTHONPATH=src python examples/train_tig_speed.py [--big] [--shards]
 
 (--big uses the 97k-node dgraphfin-s preset; default is a 1/4-scale variant
-so the example finishes in a few minutes on one CPU core.)
+so the example finishes in a few minutes on one CPU core.  --shards runs
+the out-of-core quality path instead: the stream is written to a
+``tig-shards-v1`` directory and trained/evaluated from disk with
+val-driven model selection — the same protocol code, no in-memory graph.)
 """
 
 import argparse
 import os
+import tempfile
 import time
 
 import numpy as np
@@ -28,7 +33,8 @@ from repro.tig.data import synthetic_tig
 from repro.tig.distributed import pac_train
 from repro.tig.graph import chronological_split
 from repro.tig.models import TIGConfig
-from repro.tig.train import evaluate_params
+from repro.tig.stream import write_graph_shards
+from repro.tig.train import train_sharded
 
 
 def main():
@@ -42,11 +48,37 @@ def main():
                     help="route attention/GRU inside the scanned epoch "
                          "through the Pallas kernels (TPU; on CPU set "
                          "REPRO_KERNEL_BACKEND=interpret to validate)")
+    ap.add_argument("--shards", action="store_true",
+                    help="out-of-core quality path: train + evaluate from "
+                         "a tig-shards-v1 directory (no in-memory graph)")
     args = ap.parse_args()
 
     scale = 1.0 if args.big else 0.25
     g = synthetic_tig("dgraphfin-s", seed=7, scale=scale)
     print("dataset:", g.stats())
+
+    if args.shards:
+        cfg = TIGConfig(flavor="tgn", dim=64, dim_time=32,
+                        dim_edge=g.dim_edge, dim_node=g.dim_node,
+                        num_neighbors=10, batch_size=200,
+                        use_pallas=args.pallas)
+        t0 = time.perf_counter()
+        with tempfile.TemporaryDirectory() as tmp:
+            sh = write_graph_shards(g, os.path.join(tmp, "shards"))
+            del g                       # stream lives on disk from here on
+            res = train_sharded(sh, cfg, epochs=args.epochs, protocol=True,
+                                patience=max(1, args.epochs - 1),
+                                eval_node_class=True)
+        m = res.metrics
+        print(f"sharded protocol: {len(res.losses)} epochs "
+              f"(best epoch {res.best_epoch}, val curve "
+              f"{[round(v, 4) for v in res.val_curve]})")
+        print(f"downstream: val AP {m['val_ap']:.3f}  test AP "
+              f"{m['test_ap']:.3f}  inductive {m['test_ap_inductive']:.3f}"
+              f"  node AUROC {m['node_auroc']:.3f}")
+        print(f"total {time.perf_counter() - t0:.1f}s")
+        return
+
     train_g, _, _, _ = chronological_split(g)
 
     t0 = time.perf_counter()
@@ -63,7 +95,8 @@ def main():
                     dim_node=g.dim_node, num_neighbors=10, batch_size=200,
                     use_pallas=args.pallas)
     res = pac_train(train_g, part, cfg, num_devices=args.devices,
-                    epochs=args.epochs, lr=1e-3, shuffle_parts=True)
+                    epochs=args.epochs, lr=1e-3, shuffle_parts=True,
+                    eval_graph=g, eval_node_class=True)
     steps = sum(l.shape[-1] for l in res.losses)
     print(f"PAC: {steps} lockstep steps x {args.devices} devices, "
           f"losses {res.mean_loss_per_epoch().round(4).tolist()}, "
@@ -75,7 +108,7 @@ def main():
                            metadata={"arch": "speed-tig", "cfg": str(cfg)})
     print("checkpoint:", path)
 
-    ev = evaluate_params(g, cfg, res.params, eval_node_class=True)
+    ev = res.metrics   # routed through protocol.run_protocol by pac_train
     print(f"downstream: val AP {ev['val_ap']:.3f}  test AP "
           f"{ev['test_ap']:.3f}  inductive {ev['test_ap_inductive']:.3f}  "
           f"node AUROC {ev['node_auroc']:.3f}")

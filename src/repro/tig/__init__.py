@@ -10,14 +10,20 @@ Modules:
   * ``batching``   — fixed-shape chronological batch construction.
   * ``stream``     — out-of-core shard format, chunked JODIE ingestion,
                      chunked device staging, epoch prefetcher.
-  * ``train``      — single-device trainer + evaluation protocol.
+  * ``protocol``   — the evaluation-protocol subsystem: chronological
+                     splits as zero-copy stream views + the
+                     replay-to-warm-memory val/test scoring driver shared
+                     by every trainer.
+  * ``train``      — single-device + out-of-core sharded trainers.
   * ``distributed``— PAC device half (vmap simulation / shard_map SPMD).
   * ``evaluation`` — AP / AUROC metrics (numpy).
 """
 
 from repro.tig.graph import TemporalGraph, chronological_split
 from repro.tig.models import TIGConfig
+from repro.tig.protocol import ProtocolSplits, run_protocol, split_views
 from repro.tig.stream import EpochPrefetcher, ShardedStream
 
 __all__ = ["TemporalGraph", "chronological_split", "TIGConfig",
-           "ShardedStream", "EpochPrefetcher"]
+           "ShardedStream", "EpochPrefetcher",
+           "ProtocolSplits", "run_protocol", "split_views"]

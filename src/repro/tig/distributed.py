@@ -54,8 +54,9 @@ from repro.tig.batching import LocalStream, build_batch_program
 from repro.tig.engine import scan_train_epoch
 from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state
+from repro.tig.protocol import time_scale_of
 from repro.tig.stream import EpochPrefetcher
-from repro.tig.train import epoch_rng, time_scale_of
+from repro.tig.train import epoch_rng
 
 __all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "pac_train",
            "PACResult"]
@@ -315,6 +316,7 @@ class PACResult:
     derived_speedup: float
     edges_per_device: np.ndarray
     plan: EpochPlan
+    metrics: Optional[dict] = None   # run_protocol output (eval_graph given)
 
     def mean_loss_per_epoch(self) -> np.ndarray:
         return np.array([float(l.mean()) for l in self.losses])
@@ -333,6 +335,8 @@ def pac_train(
     sync_mode: Literal["latest", "mean"] = "latest",
     mesh: Optional[Mesh] = None,
     prefetch: bool = True,
+    eval_graph: Optional[TemporalGraph] = None,
+    eval_node_class: bool = False,
 ) -> PACResult:
     """Train a TIG model with SEP partitions + PAC (the paper's pipeline).
 
@@ -343,6 +347,12 @@ def pac_train(
     combine, localization, batch grids — and its host->device transfer run
     on a worker thread while cycle e's scan executes; per-epoch RNG streams
     keep results bit-identical to serial planning.
+
+    ``eval_graph`` (the FULL chronological stream, of which ``g_train`` is
+    the train split) routes the trained parameters through the shared
+    evaluation-protocol driver (``protocol.run_protocol`` — the same code
+    path as ``train_single`` / ``train_sharded(protocol=True)``) and
+    attaches the resulting val/test metrics to ``PACResult.metrics``.
     """
     from repro.optim import adamw
 
@@ -395,6 +405,13 @@ def pac_train(
 
     from repro.core.pac import derived_speedup as dsp
 
+    metrics = None
+    if eval_graph is not None:
+        from repro.tig.train import evaluate_params
+
+        metrics = evaluate_params(eval_graph, cfg, params, seed=seed,
+                                  eval_node_class=eval_node_class)
+
     return PACResult(
         params=params,
         memory_states=jax.tree.map(np.asarray, states),
@@ -402,4 +419,5 @@ def pac_train(
         derived_speedup=dsp(last_plan.edges_per_device),
         edges_per_device=last_plan.edges_per_device,
         plan=last_plan,
+        metrics=metrics,
     )

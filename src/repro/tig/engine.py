@@ -29,6 +29,7 @@ fallback.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -160,13 +161,32 @@ def scan_eval_stream(
     return jax.lax.scan(scan_step, state, batches)
 
 
+_EVAL_PROGRAMS: dict = {}
+_EVAL_PROGRAMS_MAX = 32          # bounded: evict oldest, don't pin every
+                                 # compiled program for process lifetime
+
+
 def make_eval_epoch(cfg: TIGConfig, *, collect_embeddings: bool = False):
     """jit'd eval-stream program: (params, state, batches, tables) ->
     (state, stacked aux).
 
+    Programs are cached per (cfg, collect_embeddings): per-epoch validation
+    during training, the protocol driver's train replay, and final scoring
+    all reuse one compiled scan instead of re-tracing a fresh ``jax.jit``
+    wrapper on every call.
+
     No buffer donation here: callers legitimately reuse the input state
     (e.g. train_single evaluates val from the epoch-end memory it also
     keeps for the returned result)."""
-    fn = functools.partial(scan_eval_stream, cfg=cfg,
-                           collect_embeddings=collect_embeddings)
-    return jax.jit(fn)
+    key = (dataclasses.astuple(cfg), collect_embeddings)
+    fn = _EVAL_PROGRAMS.get(key)
+    if fn is None:
+        while len(_EVAL_PROGRAMS) >= _EVAL_PROGRAMS_MAX:
+            _EVAL_PROGRAMS.pop(next(iter(_EVAL_PROGRAMS)))
+        # the key is by VALUE: close over a defensive copy so in-place
+        # mutation of the caller's cfg can't desync a cached program
+        fn = jax.jit(functools.partial(
+            scan_eval_stream, cfg=dataclasses.replace(cfg),
+            collect_embeddings=collect_embeddings))
+        _EVAL_PROGRAMS[key] = fn
+    return fn

@@ -1,14 +1,19 @@
 """Evaluation metrics (numpy; no sklearn offline) + node classification.
 
 Average Precision for temporal link prediction (paper Tab.IV) and AUROC for
-dynamic node classification (paper Tab.V).
+dynamic node classification (paper Tab.V).  ``link_prediction_metrics``
+assembles the full transductive + inductive metric row from paired
+positive/negative logits — the one place the protocol layer's numbers are
+computed.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
-__all__ = ["average_precision", "roc_auc"]
+__all__ = ["average_precision", "roc_auc", "link_prediction_metrics"]
 
 
 def average_precision(y_true: np.ndarray, scores: np.ndarray) -> float:
@@ -50,3 +55,38 @@ def roc_auc(y_true: np.ndarray, scores: np.ndarray) -> float:
     r_pos = ranks[y_true].sum()
     u = r_pos - n_pos * (n_pos + 1) / 2.0
     return float(u / (n_pos * n_neg))
+
+
+def link_prediction_metrics(
+    pos_logit: np.ndarray,
+    neg_logit: np.ndarray,
+    inductive_mask: Optional[np.ndarray] = None,
+) -> dict:
+    """AP/AUROC over paired positive/negative logits (one negative per
+    positive, the JODIE/TGN convention).
+
+    ``inductive_mask`` — one bool per positive/negative pair — restricts a
+    second AP/AUROC to the inductive subset (edges touching
+    never-seen-in-train nodes, paper Tab.IV); NaN when the subset is empty.
+    """
+    pos = np.asarray(pos_logit, np.float64).reshape(-1)
+    neg = np.asarray(neg_logit, np.float64).reshape(-1)
+    y = np.concatenate([np.ones_like(pos), np.zeros_like(neg)])
+    s = np.concatenate([pos, neg])
+    out = {"ap": average_precision(y, s), "auc": roc_auc(y, s)}
+    if inductive_mask is not None:
+        m = np.asarray(inductive_mask, dtype=bool).reshape(-1)
+        if m.shape[0] != len(pos):
+            raise ValueError(
+                f"inductive_mask has {m.shape[0]} entries for {len(pos)} "
+                "positive/negative pairs")
+        if m.any():
+            y_i = np.concatenate([np.ones(int(m.sum())),
+                                  np.zeros(int(m.sum()))])
+            s_i = np.concatenate([pos[m], neg[m]])
+            out["ap_inductive"] = average_precision(y_i, s_i)
+            out["auc_inductive"] = roc_auc(y_i, s_i)
+        else:
+            out["ap_inductive"] = float("nan")
+            out["auc_inductive"] = float("nan")
+    return out

@@ -96,19 +96,25 @@ def chronological_split(
     """70/15/15 chronological edge split (paper §III-A, 'before implementing
     our SEP' — the partitioner only ever sees the training split).
 
+    The boundary math and inductive-node discovery live in
+    ``repro.tig.protocol`` (the single protocol layer — trainers use its
+    zero-copy stream views); this wrapper materializes ``TemporalGraph``
+    slices for callers that need actual sub-graphs, e.g. the partitioner
+    input.
+
     Returns (train, val, test, inductive_nodes): ``inductive_nodes`` are
     nodes that never appear in training — the inductive link-prediction
     evaluation (paper Tab.IV) restricts to edges touching them.
     """
+    from repro.tig.protocol import inductive_node_mask, split_bounds
+
     e = g.num_edges
-    n_train = int(e * train_frac)
-    n_val = int(e * (train_frac + val_frac))
+    n_train, n_val = split_bounds(e, train_frac, val_frac)
     idx = np.arange(e)
     train = g.slice_edges(idx[:n_train], f"{g.name}/train")
     val = g.slice_edges(idx[n_train:n_val], f"{g.name}/val")
     test = g.slice_edges(idx[n_val:], f"{g.name}/test")
-    seen = np.zeros(g.num_nodes, dtype=bool)
-    seen[train.src] = True
-    seen[train.dst] = True
-    inductive_nodes = np.nonzero(~seen)[0]
+    inductive_nodes = np.nonzero(
+        inductive_node_mask(g.src[:n_train], g.dst[:n_train],
+                            g.num_nodes))[0]
     return train, val, test, inductive_nodes

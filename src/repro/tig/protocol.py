@@ -1,0 +1,408 @@
+"""Evaluation-protocol subsystem: the single quality path for every trainer.
+
+The paper's downstream claims (Tab.IV link prediction, Tab.V node
+classification) are all produced by ONE protocol (§III-A): a chronological
+70/15/15 edge split, training on the first 70%, validation-driven model
+selection on the next 15%, and final transductive + inductive scoring on the
+last 15% with node memory warmed by replaying the earlier splits (params
+frozen).  This module owns that protocol end to end so ``train_single``,
+``train_sharded``, and ``pac_train`` report through identical code:
+
+  * ``split_bounds`` / ``split_views`` — the chronological split as
+    **zero-copy row-range views**: three ``LocalStream``s slicing one set of
+    backing id/time columns (numpy basic slicing, no sub-graph copies; for a
+    ``ShardedStream`` the per-edge feature table never leaves disk/device),
+  * ``inductive_node_mask`` — never-seen-in-train node discovery in one
+    chunked pass,
+  * ``score_stream`` — forward-only scoring of one chronological stream
+    (memory keeps updating) with correctly *valid-aligned* inductive masks,
+  * ``run_protocol`` — the replay-to-warm-memory driver: train replays
+    through ``engine.make_eval_epoch``, then val/test are scored as scanned
+    programs, with ``EpochPrefetcher`` double-buffering split e+1's host
+    plan (and device transfer) against split e's scan,
+  * ``train_classifier_head`` — the Tab.V dynamic node-classification head
+    on frozen interaction-time embeddings.
+
+Splits are views of a shared chronological order, so "train < val < test in
+time" holds by construction; the only per-edge allocations are the id/time
+columns themselves (8 bytes/edge/column — the feature table is what must
+stay out of core, and does).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tig.batching import LocalStream, build_batch_program, stack_batches
+from repro.tig.engine import make_eval_epoch
+from repro.tig.evaluation import link_prediction_metrics, roc_auc
+from repro.tig.graph import TemporalGraph
+from repro.tig.models import TIGConfig, init_state
+from repro.tig.stream import EpochPrefetcher, ShardedStream
+
+__all__ = [
+    "DEFAULT_CHUNK_EDGES",
+    "ProtocolSplits",
+    "split_bounds",
+    "split_views",
+    "inductive_node_mask",
+    "time_scale_of",
+    "device_batches",
+    "score_stream",
+    "run_protocol",
+    "train_classifier_head",
+]
+
+DEFAULT_CHUNK_EDGES = 1 << 20
+
+
+def time_scale_of(t: np.ndarray) -> float:
+    """Mean inter-event gap — timestamps are divided by this so Δt is O(1)
+    (keeps Jodie's (1 + Δt·w) projection and Φ's frequency ladder in a sane
+    numeric range regardless of the dataset's clock unit)."""
+    if len(t) < 2:
+        return 1.0
+    gaps = np.diff(np.sort(t))
+    m = float(gaps.mean())
+    return m if m > 0 else 1.0
+
+
+def split_bounds(
+    num_edges: int,
+    train_frac: float = 0.70,
+    val_frac: float = 0.15,
+) -> tuple[int, int]:
+    """Row boundaries of the chronological split: rows [0, n_train) train,
+    [n_train, n_val_end) validation, [n_val_end, num_edges) test."""
+    n_train = int(num_edges * train_frac)
+    n_val_end = int(num_edges * (train_frac + val_frac))
+    return n_train, n_val_end
+
+
+def inductive_node_mask(
+    src: np.ndarray,
+    dst: np.ndarray,
+    num_nodes: int,
+    *,
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+) -> np.ndarray:
+    """(N,) bool — nodes that NEVER appear in (src, dst), discovered in one
+    chunked pass (works directly on memory-mapped columns: only
+    ``chunk_edges`` ids are touched at a time)."""
+    seen = np.zeros(num_nodes, dtype=bool)
+    for lo in range(0, len(src), chunk_edges):
+        seen[np.asarray(src[lo:lo + chunk_edges], np.int64)] = True
+        seen[np.asarray(dst[lo:lo + chunk_edges], np.int64)] = True
+    return ~seen
+
+
+@dataclasses.dataclass
+class ProtocolSplits:
+    """The chronological 70/15/15 protocol split as zero-copy stream views.
+
+    ``train`` / ``val`` / ``test`` are ``LocalStream``s whose arrays are
+    slices (views) of one set of backing columns; ``inductive`` marks nodes
+    never seen in the train rows; ``neg_pool`` is the full-stream negative
+    candidate set (the JODIE/TGN convention).  ``bounds`` are the
+    (n_train, n_val_end) row boundaries within [0, num_edges).
+    """
+
+    train: LocalStream
+    val: LocalStream
+    test: LocalStream
+    inductive: np.ndarray          # (N,) bool
+    neg_pool: np.ndarray
+    bounds: tuple[int, int]
+    num_nodes: int
+    num_edges: int
+    time_scale: float
+    name: str = "tig"
+
+    @property
+    def views(self) -> tuple[LocalStream, LocalStream, LocalStream]:
+        return (self.train, self.val, self.test)
+
+    def inductive_edge_mask(self, view: LocalStream) -> np.ndarray:
+        """Per-edge mask of ``view``: edge touches a never-seen-in-train
+        node (the paper's inductive link-prediction subset)."""
+        return self.inductive[view.src] | self.inductive[view.dst]
+
+
+def split_views(
+    source: Union[ShardedStream, TemporalGraph],
+    train_frac: float = 0.70,
+    val_frac: float = 0.15,
+    *,
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+) -> ProtocolSplits:
+    """Chronological 70/15/15 split of a stream as zero-copy row-range views.
+
+    ``source`` is an in-memory ``TemporalGraph`` or an out-of-core
+    ``ShardedStream``.  Only the id/label/time columns are materialized
+    (8 bytes/edge each; for shards this is the same cost the trainers
+    already pay) — edge features are NOT touched, and the three splits are
+    numpy views into the shared columns, not sub-graph copies.  Timestamps
+    are rescaled to mean-gap units (``time_scale_of``) exactly as the
+    trainers do, so plans built from these views are interchangeable with
+    the trainers' own.
+    """
+    if isinstance(source, ShardedStream):
+        src = source.column("src")
+        dst = source.column("dst")
+        t = source.column("t")
+        labels = source.column("label") if source.has_labels else None
+        num_nodes, name = source.num_nodes, source.name
+    elif isinstance(source, TemporalGraph):
+        src = np.asarray(source.src, np.int64)
+        dst = np.asarray(source.dst, np.int64)
+        t = np.asarray(source.t, np.float64)
+        labels = source.labels
+        num_nodes, name = source.num_nodes, source.name
+    else:
+        raise TypeError(
+            f"split_views needs a ShardedStream or TemporalGraph, got "
+            f"{type(source).__name__}")
+
+    scale = time_scale_of(t)
+    t = t / scale
+    num_edges = len(src)
+    eidx = np.arange(num_edges, dtype=np.int64)
+    n_train, n_val_end = split_bounds(num_edges, train_frac, val_frac)
+
+    def view(lo: int, hi: int) -> LocalStream:
+        return LocalStream(
+            src=src[lo:hi], dst=dst[lo:hi], t=t[lo:hi], eidx=eidx[lo:hi],
+            num_local_nodes=num_nodes,
+            labels=None if labels is None else labels[lo:hi],
+        )
+
+    return ProtocolSplits(
+        train=view(0, n_train),
+        val=view(n_train, n_val_end),
+        test=view(n_val_end, num_edges),
+        inductive=inductive_node_mask(src[:n_train], dst[:n_train],
+                                      num_nodes, chunk_edges=chunk_edges),
+        neg_pool=np.unique(dst),
+        bounds=(n_train, n_val_end),
+        num_nodes=num_nodes,
+        num_edges=num_edges,
+        time_scale=scale,
+        name=name,
+    )
+
+
+def device_batches(stacked_or_list) -> dict:
+    """Accept either a (steps, ...) pytree or a list of per-batch dicts and
+    return a jnp (steps, ...) pytree without host-side labels."""
+    stacked = stacked_or_list
+    if isinstance(stacked, (list, tuple)):
+        stacked = stack_batches(list(stacked))
+    return {k: jnp.asarray(v) for k, v in stacked.items() if k != "labels"}
+
+
+def score_stream(
+    params,
+    cfg: TIGConfig,
+    state,
+    batches,
+    tables_j,
+    eval_epoch_fn,
+    inductive_edge_mask: Optional[np.ndarray] = None,
+    collect_embeddings: bool = False,
+    device_batches_j: Optional[dict] = None,
+):
+    """Run a chronological stream through the model (memory keeps updating,
+    params frozen) as one scanned program and compute link-prediction
+    metrics.
+
+    ``batches`` is a (steps, ...) pytree (or legacy list) that still carries
+    the host-side ``valid`` / ``labels`` entries; ``eval_epoch_fn`` comes
+    from ``engine.make_eval_epoch``; ``device_batches_j`` optionally hands in
+    the already-staged device pytree (e.g. from an ``EpochPrefetcher``
+    worker).  ``inductive_edge_mask`` is aligned THROUGH ``valid``: it may
+    have one entry per grid row (steps*B — filtered with ``valid``) or one
+    per scored edge (``valid.sum()``); any other length raises instead of
+    silently truncating against the valid-filtered logits.
+
+    Returns dict with transductive AP/AUROC, inductive AP/AUROC when a mask
+    is given, optional collected src embeddings + labels, and the
+    post-stream state (for continuing into the next split).
+    """
+    if isinstance(batches, (list, tuple)):
+        batches = stack_batches(list(batches))
+    bj = device_batches_j if device_batches_j is not None \
+        else device_batches(batches)
+    state, aux = eval_epoch_fn(params, state, bj, tables_j)
+
+    valid = np.asarray(batches["valid"]).reshape(-1)      # (steps*B,)
+    pos = np.asarray(aux["pos_logit"]).reshape(-1)[valid]
+    neg = np.asarray(aux["neg_logit"]).reshape(-1)[valid]
+    mask = None
+    if inductive_edge_mask is not None:
+        mask = np.asarray(inductive_edge_mask, dtype=bool).reshape(-1)
+        if mask.shape[0] == valid.shape[0]:
+            mask = mask[valid]                  # grid-shaped: drop padding
+        elif mask.shape[0] != len(pos):
+            raise ValueError(
+                f"inductive_edge_mask has {mask.shape[0]} entries; expected "
+                f"one per scored edge ({len(pos)}) or one per grid row "
+                f"({valid.shape[0]})")
+    out = link_prediction_metrics(pos, neg, inductive_mask=mask)
+    out["state"] = state
+    if collect_embeddings:
+        if "src_embed" not in aux:
+            raise ValueError(
+                "collect_embeddings=True needs an eval program built with "
+                "make_eval_epoch(cfg, collect_embeddings=True)")
+        emb = np.asarray(aux["src_embed"])
+        out["embeddings"] = emb.reshape(-1, emb.shape[-1])[valid]
+        if "labels" in batches:
+            out["labels"] = np.asarray(batches["labels"]).reshape(-1)[valid]
+        else:
+            out["labels"] = None
+    return out
+
+
+def run_protocol(
+    params,
+    cfg: TIGConfig,
+    splits: ProtocolSplits,
+    tables_j: dict,
+    *,
+    seed: int = 0,
+    eval_node_class: bool = False,
+    prefetch: bool = True,
+    state=None,
+) -> dict:
+    """The replay-to-warm-memory scoring driver (paper Tab.IV/V protocol).
+
+    Replays the train split through the forward-only scanned program to
+    build node memory (no parameter updates), then scores val and test —
+    each a continuation of the previous split's memory and neighbor
+    history.  The three splits run as a 3-stage pipeline: while split e's
+    ``lax.scan`` executes, split e+1's host plan is built AND moved to
+    device on the ``EpochPrefetcher`` worker (plans are serial on one
+    worker, so the neighbor-history handoff and the shared negative-
+    sampling RNG see the exact in-order call sequence — prefetch on/off is
+    bit-identical).
+
+    Returns a flat metric dict: ``val_ap``/``val_auc``/``test_ap``/
+    ``test_auc`` (+ ``*_ap_inductive``/``*_auc_inductive`` over edges
+    touching never-seen-in-train nodes), ``train_ap`` (the replay's own
+    score, a sanity signal), and ``node_auroc`` (NaN unless
+    ``eval_node_class`` and the stream carries labels).
+    """
+    rng = np.random.default_rng(seed)
+    eval_fn = make_eval_epoch(cfg)
+    eval_fn_test = make_eval_epoch(cfg, collect_embeddings=True) \
+        if eval_node_class else eval_fn
+    views = list(splits.views)
+    hist = [None]
+
+    def build(i: int) -> dict:
+        batches, hist[0] = build_batch_program(
+            views[i], cfg, rng, history=hist[0], neg_pool=splits.neg_pool)
+        return batches
+
+    pf = EpochPrefetcher(build, len(views),
+                         to_device=lambda b: (b, device_batches(b)),
+                         enabled=prefetch)
+    if state is None:
+        state = init_state(cfg, splits.num_nodes)
+    results = []
+    for i, view in enumerate(views):
+        host, dev = pf.get(i)
+        res = score_stream(
+            params, cfg, state, host, tables_j,
+            eval_fn_test if i == 2 else eval_fn,
+            inductive_edge_mask=None if i == 0
+            else splits.inductive_edge_mask(view),
+            collect_embeddings=(i == 2 and eval_node_class),
+            device_batches_j=dev,
+        )
+        state = res["state"]
+        results.append(res)
+
+    nan = float("nan")
+    tr, va, te = results
+    out = {
+        "train_ap": tr["ap"],
+        "val_ap": va["ap"],
+        "val_auc": va["auc"],
+        "val_ap_inductive": va.get("ap_inductive", nan),
+        "val_auc_inductive": va.get("auc_inductive", nan),
+        "test_ap": te["ap"],
+        "test_auc": te["auc"],
+        "test_ap_inductive": te.get("ap_inductive", nan),
+        "test_auc_inductive": te.get("auc_inductive", nan),
+        "node_auroc": nan,
+    }
+    if eval_node_class and te.get("embeddings") is not None \
+            and te.get("labels") is not None:
+        mx = -1
+        for v in views:
+            if v.labels is not None and (v.labels >= 0).any():
+                mx = max(mx, int(v.labels[v.labels >= 0].max()))
+        if mx >= 0:
+            out["node_auroc"] = train_classifier_head(
+                te["embeddings"], te["labels"], max(mx + 1, 2))
+    return out
+
+
+def train_classifier_head(
+    embeds: np.ndarray,
+    labels: np.ndarray,
+    n_classes: int,
+    *,
+    seed: int = 0,
+    steps: int = 300,
+    lr: float = 1e-2,
+) -> float:
+    """Dynamic node classification (paper Tab.V): train a small MLP head on
+    frozen interaction-time embeddings, report AUROC on a chronological
+    70/30 split.  Multi-class -> macro one-vs-rest AUROC."""
+    from repro.optim import adamw
+    from repro.tig.modules import mlp, mlp_init
+
+    keep = labels >= 0
+    embeds, labels = embeds[keep], labels[keep]
+    n = len(labels)
+    if n < 10 or len(np.unique(labels)) < 2:
+        return float("nan")
+    cut = int(n * 0.7)
+    x_tr = jnp.asarray(embeds[:cut])
+    y_tr = jnp.asarray(labels[:cut])
+    params = mlp_init(jax.random.PRNGKey(seed),
+                      [embeds.shape[1], 64, n_classes])
+    opt = adamw(lr=lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state):
+        def loss_fn(p):
+            logits = mlp(p, x_tr)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y_tr[:, None], 1).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        return params, opt_state, loss
+
+    for _ in range(steps):
+        params, opt_state, _ = step(params, opt_state)
+
+    logits = np.asarray(mlp(params, jnp.asarray(embeds[cut:])))
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    y_te = labels[cut:]
+    if n_classes == 2:
+        return roc_auc(y_te == 1, probs[:, 1])
+    aucs = []
+    for c in range(n_classes):
+        if (y_te == c).any() and (y_te != c).any():
+            aucs.append(roc_auc(y_te == c, probs[:, c]))
+    return float(np.mean(aucs)) if aucs else float("nan")

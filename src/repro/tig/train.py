@@ -6,11 +6,17 @@ Epochs run through the device-resident streaming engine
 stream as one (steps, ...) batch pytree, and a single jitted ``lax.scan``
 executes the epoch on device.  The distributed PAC trainer
 (``repro.tig.distributed``) drives the same scan program.
+
+Split and evaluation logic lives in ``repro.tig.protocol`` — chronological
+70/15/15 splits are zero-copy stream views, and the val/test scoring of
+every trainer (this module's ``train_single`` / ``train_sharded`` and the
+PAC path) goes through the same ``run_protocol`` driver.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import tempfile
 import time
 from typing import Optional
 
@@ -18,18 +24,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.optim import adamw, Optimizer
 from repro.tig.batching import (
     LocalStream,
     build_batch_program,
     make_tables,
-    stack_batches,
 )
 from repro.tig.engine import make_eval_epoch, make_train_epoch
-from repro.tig.stream import EpochPrefetcher
-from repro.tig.evaluation import average_precision, roc_auc
 from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state, step_loss
+from repro.tig.protocol import (
+    DEFAULT_CHUNK_EDGES,
+    ProtocolSplits,
+    device_batches,
+    run_protocol,
+    score_stream,
+    split_views,
+    time_scale_of,
+    train_classifier_head,
+)
+from repro.tig.stream import EpochPrefetcher
 
 __all__ = [
     "graph_as_stream",
@@ -37,11 +52,16 @@ __all__ = [
     "make_eval_step",
     "train_epoch",
     "evaluate_stream",
+    "evaluate_params",
     "train_single",
     "train_sharded",
     "train_classifier_head",
+    "time_scale_of",
     "epoch_rng",
 ]
+
+# the protocol layer owns stream scoring; the old name stays importable
+evaluate_stream = score_stream
 
 
 def epoch_rng(seed: int, epoch: int, role: int = 0) -> np.random.Generator:
@@ -50,17 +70,6 @@ def epoch_rng(seed: int, epoch: int, role: int = 0) -> np.random.Generator:
     bit-identical draws to serial planning."""
     return np.random.default_rng(
         np.random.SeedSequence([seed, role, epoch]))
-
-
-def time_scale_of(t: np.ndarray) -> float:
-    """Mean inter-event gap — timestamps are divided by this so Δt is O(1)
-    (keeps Jodie's (1 + Δt·w) projection and Φ's frequency ladder in a sane
-    numeric range regardless of the dataset's clock unit)."""
-    if len(t) < 2:
-        return 1.0
-    gaps = np.diff(np.sort(t))
-    m = float(gaps.mean())
-    return m if m > 0 else 1.0
 
 
 def graph_as_stream(g: TemporalGraph) -> tuple[LocalStream, dict]:
@@ -77,15 +86,6 @@ def graph_as_stream(g: TemporalGraph) -> tuple[LocalStream, dict]:
         labels=g.labels,
     )
     return stream, make_tables(g.edge_feat, g.node_feat)
-
-
-def _device_batches(stacked_or_list) -> dict:
-    """Accept either a (steps, ...) pytree or a list of per-batch dicts and
-    return a jnp (steps, ...) pytree without host-side labels."""
-    stacked = stacked_or_list
-    if isinstance(stacked, (list, tuple)):
-        stacked = stack_batches(list(stacked))
-    return {k: jnp.asarray(v) for k, v in stacked.items() if k != "labels"}
 
 
 def make_train_step(cfg: TIGConfig, opt: Optimizer):
@@ -122,67 +122,10 @@ def train_epoch(params, opt_state, state, batches, tables_j, epoch_fn):
     dicts); ``epoch_fn`` comes from ``engine.make_train_epoch``.  Returns
     mean loss over steps.
     """
-    bj = _device_batches(batches)
+    bj = device_batches(batches)
     params, opt_state, state, losses = epoch_fn(
         params, opt_state, state, bj, tables_j)
     return params, opt_state, state, float(jnp.mean(losses))
-
-
-def evaluate_stream(
-    params,
-    cfg: TIGConfig,
-    state,
-    batches,
-    tables_j,
-    eval_epoch_fn,
-    inductive_edge_mask: Optional[np.ndarray] = None,
-    collect_embeddings: bool = False,
-):
-    """Run a chronological stream through the model (memory keeps updating,
-    params frozen) as one scanned program and compute link-prediction AP.
-
-    ``batches`` is a (steps, ...) pytree (or legacy list) that still carries
-    the host-side ``valid`` / ``labels`` entries; ``eval_epoch_fn`` comes
-    from ``engine.make_eval_epoch``.  Returns dict with transductive AP/AUC,
-    optional inductive AP (edges touching never-seen-in-train nodes),
-    optional collected src embeddings, and the post-stream state (for
-    continuing to the next split).
-    """
-    if isinstance(batches, (list, tuple)):
-        batches = stack_batches(list(batches))
-    bj = _device_batches(batches)
-    state, aux = eval_epoch_fn(params, state, bj, tables_j)
-
-    valid = np.asarray(batches["valid"]).reshape(-1)      # (steps*B,)
-    pos = np.asarray(aux["pos_logit"]).reshape(-1)[valid]
-    neg = np.asarray(aux["neg_logit"]).reshape(-1)[valid]
-    y = np.concatenate([np.ones_like(pos), np.zeros_like(neg)])
-    s = np.concatenate([pos, neg])
-    out = {
-        "ap": average_precision(y, s),
-        "auc": roc_auc(y, s),
-        "state": state,
-    }
-    if inductive_edge_mask is not None:
-        m = np.asarray(inductive_edge_mask[: len(pos)]).astype(bool)
-        if m.any():
-            y_i = np.concatenate([np.ones(m.sum()), np.zeros(m.sum())])
-            s_i = np.concatenate([pos[m], neg[m]])
-            out["ap_inductive"] = average_precision(y_i, s_i)
-        else:
-            out["ap_inductive"] = float("nan")
-    if collect_embeddings:
-        if "src_embed" not in aux:
-            raise ValueError(
-                "collect_embeddings=True needs an eval program built with "
-                "make_eval_epoch(cfg, collect_embeddings=True)")
-        emb = np.asarray(aux["src_embed"])
-        out["embeddings"] = emb.reshape(-1, emb.shape[-1])[valid]
-        if "labels" in batches:
-            out["labels"] = np.asarray(batches["labels"]).reshape(-1)[valid]
-        else:
-            out["labels"] = None
-    return out
 
 
 @dataclasses.dataclass
@@ -192,6 +135,9 @@ class ShardedResult:
     params: dict
     state: dict
     cfg: TIGConfig
+    metrics: Optional[dict] = None      # run_protocol output (protocol=True)
+    best_epoch: Optional[int] = None
+    val_curve: list[float] = dataclasses.field(default_factory=list)
 
 
 def train_sharded(
@@ -202,35 +148,65 @@ def train_sharded(
     lr: float = 1e-3,
     seed: int = 0,
     prefetch: bool = True,
+    protocol: bool = False,
+    patience: int = 2,
+    eval_node_class: bool = False,
+    ckpt_dir: Optional[str] = None,
 ) -> ShardedResult:
-    """Out-of-core training over a ``tig-shards-v1`` stream (whole stream
-    as the train split; quality evaluation stays with ``train_single``).
+    """Out-of-core training over a ``tig-shards-v1`` stream.
 
     The full data plane is chunked: id columns materialize at 8 bytes/edge,
     the edge-feature table is staged shard-by-shard into a donated device
     buffer (the host never holds all rows), the temporal neighbor index is
     built with the chunked T-CSR merge, and epoch plans are prefetched on
     a worker thread while the previous epoch's scan runs.
+
+    With ``protocol=False`` (the legacy fast path) the whole stream is the
+    train split and no evaluation runs.  With ``protocol=True`` the quality
+    path runs end-to-end from shards: the 70/15/15 chronological split
+    becomes zero-copy row-range views (``protocol.split_views``), training
+    sees only the train rows, each epoch scores the val split from the
+    epoch-end memory, the best-val parameters (with their epoch-end memory)
+    are kept via ``repro.checkpoint`` (patience-based early stop), and the
+    final metrics come from ``protocol.run_protocol`` with the restored
+    best params —
+    identical code (and identical numbers, given identical plans) to
+    ``evaluate_params`` on the equivalent in-memory graph.
     """
     from repro.tig.sampler import ChronoNeighborIndex
     from repro.tig.stream import stage_device_tables
 
-    src = shards.column("src")
-    dst = shards.column("dst")
-    t = shards.column("t")
-    scale = time_scale_of(t)
-    stream = LocalStream(
-        src=src.astype(np.int64),
-        dst=dst.astype(np.int64),
-        t=t / scale,
-        eidx=np.arange(len(src), dtype=np.int64),
-        num_local_nodes=shards.num_nodes,
-        labels=None,
-    )
+    splits: Optional[ProtocolSplits] = None
+    if protocol:
+        splits = split_views(shards)
+        stream = splits.train
 
-    def scaled_chunks():
-        for c_src, c_dst, c_t, c_eidx in shards.edge_chunks():
-            yield c_src, c_dst, c_t / scale, c_eidx
+        def scaled_chunks():
+            for lo in range(0, stream.num_edges, DEFAULT_CHUNK_EDGES):
+                hi = min(lo + DEFAULT_CHUNK_EDGES, stream.num_edges)
+                yield (stream.src[lo:hi], stream.dst[lo:hi],
+                       stream.t[lo:hi], stream.eidx[lo:hi])
+
+        neg_pool = splits.neg_pool
+    else:
+        src = shards.column("src")
+        dst = shards.column("dst")
+        t = shards.column("t")
+        scale = time_scale_of(t)
+        stream = LocalStream(
+            src=src.astype(np.int64),
+            dst=dst.astype(np.int64),
+            t=t / scale,
+            eidx=np.arange(len(src), dtype=np.int64),
+            num_local_nodes=shards.num_nodes,
+            labels=None,
+        )
+
+        def scaled_chunks():
+            for c_src, c_dst, c_t, c_eidx in shards.edge_chunks():
+                yield c_src, c_dst, c_t / scale, c_eidx
+
+        neg_pool = np.unique(stream.dst)
 
     # index is epoch-invariant (same stream, no history): chunked build once
     index = ChronoNeighborIndex.from_chunks(
@@ -241,26 +217,74 @@ def train_sharded(
     opt = adamw(lr=lr, max_grad_norm=1.0)
     opt_state = opt.init(params)
     epoch_fn = make_train_epoch(cfg, opt)
-    neg_pool = np.unique(stream.dst)
+    eval_fn = make_eval_epoch(cfg)
+    train_hist = index.final_snapshot() if protocol else None
+    val_mask = splits.inductive_edge_mask(splits.val) if protocol else None
+
+    own_tmp = None
+    if protocol and ckpt_dir is None:
+        own_tmp = tempfile.TemporaryDirectory(prefix="tig_ckpt_")
+        ckpt_dir = own_tmp.name
 
     pf = EpochPrefetcher(
         lambda ep: build_batch_program(
             stream, cfg, epoch_rng(seed, ep, 1), neg_pool=neg_pool,
             index=index)[0],
         epochs,
-        to_device=_device_batches,
+        to_device=device_batches,
         enabled=prefetch,
     )
-    losses, epoch_secs = [], []
+    losses, epoch_secs, val_curve = [], [], []
     state = None
-    for ep in range(epochs):
-        t0 = time.perf_counter()
-        batches = pf.get(ep)
-        state = init_state(cfg, shards.num_nodes)
-        params, opt_state, state, loss = train_epoch(
-            params, opt_state, state, batches, tables_j, epoch_fn)
-        epoch_secs.append(time.perf_counter() - t0)
-        losses.append(loss)
+    best_val, best_epoch, bad = -np.inf, None, 0
+    try:
+        for ep in range(epochs):
+            t0 = time.perf_counter()
+            batches = pf.get(ep)
+            state = init_state(cfg, shards.num_nodes)
+            params, opt_state, state, loss = train_epoch(
+                params, opt_state, state, batches, tables_j, epoch_fn)
+            epoch_secs.append(time.perf_counter() - t0)
+            losses.append(loss)
+
+            if not protocol:
+                continue
+            # validation continues the epoch-end memory + train history
+            val_batches, _ = build_batch_program(
+                splits.val, cfg, epoch_rng(seed, ep, 2),
+                history=train_hist, neg_pool=neg_pool)
+            res_val = score_stream(params, cfg, state, val_batches,
+                                   tables_j, eval_fn,
+                                   inductive_edge_mask=val_mask)
+            val_curve.append(res_val["ap"])
+            if res_val["ap"] > best_val:
+                best_val, best_epoch, bad = res_val["ap"], ep, 0
+                # params AND their epoch-end memory: the restored pair is a
+                # consistent training point, not best params + later state
+                save_checkpoint(ckpt_dir, ep,
+                                {"params": params, "state": state},
+                                metadata={"val_ap": float(res_val["ap"])})
+            else:
+                bad += 1
+                if bad >= patience:
+                    pf.close()      # drop the in-flight next-epoch plan
+                    break
+
+        metrics = None
+        if protocol:
+            # best_epoch is None when no epoch ran or val AP was NaN
+            # throughout (e.g. a degenerate val split) — keep last params
+            if best_epoch is not None:
+                restored = restore_checkpoint(
+                    ckpt_dir, best_epoch,
+                    {"params": params, "state": state})
+                params, state = restored["params"], restored["state"]
+            metrics = run_protocol(
+                params, cfg, splits, tables_j, seed=seed,
+                eval_node_class=eval_node_class, prefetch=prefetch)
+    finally:
+        if own_tmp is not None:
+            own_tmp.cleanup()
 
     return ShardedResult(
         losses=losses,
@@ -268,60 +292,10 @@ def train_sharded(
         params=params,
         state=state,
         cfg=cfg,
+        metrics=metrics,
+        best_epoch=best_epoch,
+        val_curve=val_curve,
     )
-
-
-def train_classifier_head(
-    embeds: np.ndarray,
-    labels: np.ndarray,
-    n_classes: int,
-    *,
-    seed: int = 0,
-    steps: int = 300,
-    lr: float = 1e-2,
-) -> float:
-    """Dynamic node classification (paper Tab.V): train a small MLP head on
-    frozen interaction-time embeddings, report AUROC on a chronological
-    70/30 split.  Multi-class -> macro one-vs-rest AUROC."""
-    from repro.tig.modules import mlp, mlp_init
-
-    keep = labels >= 0
-    embeds, labels = embeds[keep], labels[keep]
-    n = len(labels)
-    if n < 10 or len(np.unique(labels)) < 2:
-        return float("nan")
-    cut = int(n * 0.7)
-    x_tr = jnp.asarray(embeds[:cut])
-    y_tr = jnp.asarray(labels[:cut])
-    params = mlp_init(jax.random.PRNGKey(seed),
-                      [embeds.shape[1], 64, n_classes])
-    opt = adamw(lr=lr)
-    opt_state = opt.init(params)
-
-    @jax.jit
-    def step(params, opt_state):
-        def loss_fn(p):
-            logits = mlp(p, x_tr)
-            logp = jax.nn.log_softmax(logits)
-            return -jnp.take_along_axis(logp, y_tr[:, None], 1).mean()
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.apply(grads, opt_state, params)
-        return params, opt_state, loss
-
-    for _ in range(steps):
-        params, opt_state, _ = step(params, opt_state)
-
-    logits = np.asarray(mlp(params, jnp.asarray(embeds[cut:])))
-    probs = np.exp(logits - logits.max(-1, keepdims=True))
-    probs = probs / probs.sum(-1, keepdims=True)
-    y_te = labels[cut:]
-    if n_classes == 2:
-        return roc_auc(y_te == 1, probs[:, 1])
-    aucs = []
-    for c in range(n_classes):
-        if (y_te == c).any() and (y_te != c).any():
-            aucs.append(roc_auc(y_te == c, probs[:, c]))
-    return float(np.mean(aucs)) if aucs else float("nan")
 
 
 def evaluate_params(
@@ -335,61 +309,15 @@ def evaluate_params(
     """Evaluate (PAC-)trained parameters on the standard protocol: replay the
     train split to build memory (no parameter updates), then score val/test
     link prediction (+ optional node classification).  This is how the
-    partition-trained rows of Tab.IV/V are produced."""
-    from repro.tig.graph import chronological_split
+    partition-trained rows of Tab.IV/V are produced.
 
-    rng = np.random.default_rng(seed)
-    train_g, val_g, test_g, inductive_nodes = chronological_split(g)
-    ind = np.zeros(g.num_nodes, dtype=bool)
-    ind[inductive_nodes] = True
-
-    stream, tables = graph_as_stream(g)
+    Thin wrapper over ``protocol.run_protocol`` on zero-copy split views —
+    the same driver the sharded quality path reports through."""
+    splits = split_views(g)
+    tables = make_tables(g.edge_feat, g.node_feat)
     tables_j = {k: jnp.asarray(v) for k, v in tables.items()}
-    n_tr, n_val = train_g.num_edges, val_g.num_edges
-
-    def sub(lo, hi):
-        return LocalStream(
-            src=stream.src[lo:hi], dst=stream.dst[lo:hi],
-            t=stream.t[lo:hi], eidx=stream.eidx[lo:hi],
-            num_local_nodes=g.num_nodes,
-            labels=None if g.labels is None else g.labels[lo:hi],
-        )
-
-    eval_fn = make_eval_epoch(cfg)
-    eval_fn_test = make_eval_epoch(cfg, collect_embeddings=True) \
-        if eval_node_class else eval_fn
-    neg_pool = np.unique(stream.dst)
-    state = init_state(cfg, g.num_nodes)
-
-    tr_batches, hist = build_batch_program(
-        sub(0, n_tr), cfg, rng, neg_pool=neg_pool)
-    res_tr = evaluate_stream(params, cfg, state, tr_batches, tables_j,
-                             eval_fn)
-    val_batches, hist = build_batch_program(
-        sub(n_tr, n_tr + n_val), cfg, rng, history=hist, neg_pool=neg_pool)
-    res_val = evaluate_stream(params, cfg, res_tr["state"], val_batches,
-                              tables_j, eval_fn)
-    test_stream = sub(n_tr + n_val, g.num_edges)
-    ind_mask = ind[test_stream.src] | ind[test_stream.dst]
-    test_batches, _ = build_batch_program(
-        test_stream, cfg, rng, history=hist, neg_pool=neg_pool)
-    res_test = evaluate_stream(
-        params, cfg, res_val["state"], test_batches, tables_j, eval_fn_test,
-        inductive_edge_mask=ind_mask, collect_embeddings=eval_node_class)
-
-    out = {
-        "val_ap": res_val["ap"],
-        "test_ap": res_test["ap"],
-        "test_ap_inductive": res_test.get("ap_inductive", float("nan")),
-        "node_auroc": float("nan"),
-    }
-    if eval_node_class and res_test.get("embeddings") is not None \
-            and res_test.get("labels") is not None \
-            and g.labels is not None:
-        n_classes = int(g.labels[g.labels >= 0].max()) + 1
-        out["node_auroc"] = train_classifier_head(
-            res_test["embeddings"], res_test["labels"], max(n_classes, 2))
-    return out
+    return run_protocol(params, cfg, splits, tables_j, seed=seed,
+                        eval_node_class=eval_node_class)
 
 
 @dataclasses.dataclass
@@ -418,33 +346,16 @@ def train_single(
     """The paper's single-device baseline trainer: chronological 70/15/15
     split, memory reset per epoch, val/test continue the epoch-end memory.
 
-    Each epoch is one host-planning pass (vectorized neighbor index + batch
-    grid) followed by one scanned device program.  With ``prefetch`` (the
-    default) epoch e+1's plan is built — and moved to device — on a worker
-    thread while epoch e's scan runs; per-epoch RNG streams make the
-    result bit-identical to serial planning."""
-    from repro.tig.graph import chronological_split
-
-    train_g, val_g, test_g, inductive_nodes = chronological_split(g)
-    ind = np.zeros(g.num_nodes, dtype=bool)
-    ind[inductive_nodes] = True
-
-    stream, tables = graph_as_stream(g)
+    Splits are the protocol layer's zero-copy stream views (no materialized
+    sub-graphs).  Each epoch is one host-planning pass (vectorized neighbor
+    index + batch grid) followed by one scanned device program.  With
+    ``prefetch`` (the default) epoch e+1's plan is built — and moved to
+    device — on a worker thread while epoch e's scan runs; per-epoch RNG
+    streams make the result bit-identical to serial planning."""
+    splits = split_views(g)
+    tables = make_tables(g.edge_feat, g.node_feat)
     tables_j = {k: jnp.asarray(v) for k, v in tables.items()}
-    n_tr = train_g.num_edges
-    n_val = val_g.num_edges
-
-    def sub(lo, hi):
-        return LocalStream(
-            src=stream.src[lo:hi], dst=stream.dst[lo:hi],
-            t=stream.t[lo:hi], eidx=stream.eidx[lo:hi],
-            num_local_nodes=g.num_nodes,
-            labels=None if g.labels is None else g.labels[lo:hi],
-        )
-
-    tr_stream = sub(0, n_tr)
-    val_stream = sub(n_tr, n_tr + n_val)
-    test_stream = sub(n_tr + n_val, g.num_edges)
+    tr_stream, val_stream, test_stream = splits.views
 
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt = adamw(lr=lr, max_grad_norm=1.0)
@@ -454,7 +365,7 @@ def train_single(
     eval_fn_test = make_eval_epoch(cfg, collect_embeddings=True) \
         if eval_node_class else eval_fn
 
-    neg_pool = np.unique(stream.dst)
+    neg_pool = splits.neg_pool
     epoch_secs, losses = [], []
     best = {"val_ap": -1.0}
 
@@ -464,7 +375,7 @@ def train_single(
         lambda ep: build_batch_program(
             tr_stream, cfg, epoch_rng(seed, ep, 1), neg_pool=neg_pool),
         epochs,
-        to_device=lambda plan: (_device_batches(plan[0]), plan[1]),
+        to_device=lambda plan: (device_batches(plan[0]), plan[1]),
         enabled=prefetch,
     )
     for ep in range(epochs):
@@ -480,16 +391,16 @@ def train_single(
         val_batches, hist_val = build_batch_program(
             val_stream, cfg, epoch_rng(seed, ep, 2), history=hist,
             neg_pool=neg_pool)
-        res_val = evaluate_stream(params, cfg, state, val_batches,
-                                  tables_j, eval_fn)
+        res_val = score_stream(params, cfg, state, val_batches,
+                               tables_j, eval_fn)
         if res_val["ap"] > best["val_ap"]:
-            ind_mask = (ind[test_stream.src] | ind[test_stream.dst])
             test_batches, _ = build_batch_program(
                 test_stream, cfg, epoch_rng(seed, ep, 3),
                 history=hist_val, neg_pool=neg_pool)
-            res_test = evaluate_stream(
+            res_test = score_stream(
                 params, cfg, res_val["state"], test_batches, tables_j,
-                eval_fn_test, inductive_edge_mask=ind_mask,
+                eval_fn_test,
+                inductive_edge_mask=splits.inductive_edge_mask(test_stream),
                 collect_embeddings=eval_node_class,
             )
             best = {

@@ -1,0 +1,263 @@
+"""Protocol-layer tests: zero-copy split views, valid-aligned inductive
+masks (regression for the truncation bug), and the sharded-vs-in-memory
+parity the quality path promises (identical batch plan => identical
+metrics)."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+
+from repro.tig.batching import build_batch_program
+from repro.tig.data import synthetic_tig
+from repro.tig.engine import make_eval_epoch
+from repro.tig.evaluation import link_prediction_metrics
+from repro.tig.models import TIGConfig, init_params, init_state
+from repro.tig.protocol import (
+    device_batches,
+    inductive_node_mask,
+    run_protocol,
+    score_stream,
+    split_bounds,
+    split_views,
+)
+from repro.tig.stream import (
+    ShardedStream,
+    stage_device_tables,
+    write_graph_shards,
+)
+from repro.tig.train import evaluate_params, graph_as_stream, train_sharded
+
+CFG = TIGConfig(dim=16, dim_time=8, dim_edge=16, dim_node=16,
+                num_neighbors=4, batch_size=128)
+
+
+def _metrics_equal(a: dict, b: dict, keys=None):
+    for k in keys or set(a) & set(b):
+        x, y = a[k], b[k]
+        assert (np.isnan(x) and np.isnan(y)) or x == y, \
+            f"{k}: {x} != {y}"
+
+
+# ------------------------------------------------------------- split views
+
+def test_split_views_cover_disjoint_chronological_zero_copy():
+    g = synthetic_tig("tiny", seed=3)
+    s = split_views(g)
+    n_tr, n_va = s.bounds
+    assert 0 < n_tr < n_va < g.num_edges
+    assert (s.train.num_edges, s.val.num_edges, s.test.num_edges) == \
+        (n_tr, n_va - n_tr, g.num_edges - n_va)
+    # cover: concatenated views reproduce the stream, in order
+    np.testing.assert_array_equal(
+        np.concatenate([s.train.src, s.val.src, s.test.src]), g.src)
+    np.testing.assert_array_equal(
+        np.concatenate([s.train.eidx, s.val.eidx, s.test.eidx]),
+        np.arange(g.num_edges))
+    # chronological: row ranges respect time order
+    assert s.train.t.max() <= s.val.t.min() <= s.val.t.max() \
+        <= s.test.t.min()
+    # zero-copy: all three views slice ONE backing column (no sub-graphs)
+    assert s.train.src.base is s.val.src.base is s.test.src.base
+    assert s.train.src.base is not None
+    assert s.train.t.base is s.test.t.base
+    # inductive mask matches the one-shot definition
+    seen = np.zeros(g.num_nodes, bool)
+    seen[g.src[:n_tr]] = True
+    seen[g.dst[:n_tr]] = True
+    np.testing.assert_array_equal(s.inductive, ~seen)
+
+
+def test_inductive_node_mask_chunked_equals_one_shot():
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 500, 10_000)
+    dst = rng.integers(0, 500, 10_000)
+    ref = inductive_node_mask(src, dst, 500)
+    for chunk in (1, 7, 4096):
+        np.testing.assert_array_equal(
+            inductive_node_mask(src, dst, 500, chunk_edges=chunk), ref)
+
+
+def test_split_views_sharded_equals_graph(tmp_path):
+    g = synthetic_tig("tiny", seed=5)
+    sh = write_graph_shards(g, str(tmp_path / "sh"), shard_edges=313)
+    a, b = split_views(sh), split_views(g)
+    assert a.bounds == b.bounds and a.time_scale == b.time_scale
+    np.testing.assert_array_equal(a.inductive, b.inductive)
+    np.testing.assert_array_equal(a.neg_pool, b.neg_pool)
+    for va, vb in zip(a.views, b.views):
+        np.testing.assert_array_equal(va.src, vb.src)
+        np.testing.assert_array_equal(va.dst, vb.dst)
+        np.testing.assert_array_equal(va.t, vb.t)
+        np.testing.assert_array_equal(va.labels, vb.labels)
+
+
+# ------------------------------------------- inductive-mask alignment fix
+
+def _eval_setup(seed=0):
+    g = synthetic_tig("tiny", seed=seed)          # 1200 edges
+    stream, tables = graph_as_stream(g)
+    import jax.numpy as jnp
+    tables_j = {k: jnp.asarray(v) for k, v in tables.items()}
+    rng = np.random.default_rng(seed)
+    batches, _ = build_batch_program(stream, CFG, rng)
+    params = init_params(jax.random.PRNGKey(seed), CFG)
+    return g, batches, tables_j, params
+
+
+def _raw_logits(params, batches, tables_j):
+    eval_fn = make_eval_epoch(CFG)
+    state = init_state(CFG, int(tables_j["nfeat"].shape[0]) - 1)
+    _state, aux = eval_fn(params, state, device_batches(batches), tables_j)
+    valid = np.asarray(batches["valid"]).reshape(-1)
+    pos = np.asarray(aux["pos_logit"]).reshape(-1)[valid]
+    neg = np.asarray(aux["neg_logit"]).reshape(-1)[valid]
+    return valid, pos, neg
+
+
+def test_inductive_mask_partially_padded_final_batch():
+    """Regression: with 1200 % 128 != 0 the final batch is partially
+    padded; a per-edge mask and the equivalent grid-shaped mask (junk in
+    the padding slots) must produce identical inductive metrics, equal to
+    metrics computed on the masked logit subset directly."""
+    g, batches, tables_j, params = _eval_setup(seed=1)
+    n_edges = g.num_edges
+    steps, b = batches["valid"].shape
+    assert steps * b > n_edges            # partially-padded final batch
+
+    rng = np.random.default_rng(7)
+    mask_edge = rng.random(n_edges) < 0.3
+    mask_grid = np.ones(steps * b, bool)  # junk True in padding slots
+    mask_grid[:n_edges] = mask_edge
+
+    eval_fn = make_eval_epoch(CFG)
+    N = g.num_nodes
+
+    def score(mask):
+        return score_stream(params, CFG, init_state(CFG, N), batches,
+                            tables_j, eval_fn, inductive_edge_mask=mask)
+
+    res_edge, res_grid = score(mask_edge), score(mask_grid.reshape(steps, b))
+    valid, pos, neg = _raw_logits(params, batches, tables_j)
+    want = link_prediction_metrics(pos[mask_edge], neg[mask_edge])
+    for res in (res_edge, res_grid):
+        assert res["ap_inductive"] == want["ap"]
+        assert res["auc_inductive"] == want["auc"]
+
+
+def test_inductive_mask_never_truncates_against_filtered_logits():
+    """The old ``mask[: len(pos)]`` silently misaligned whenever ``valid``
+    dropped a non-padding row: a full-stream per-edge mask must now be
+    rejected, and a grid-shaped mask must align through ``valid``."""
+    g, batches, tables_j, params = _eval_setup(seed=2)
+    n_edges = g.num_edges
+    steps, b = batches["valid"].shape
+    batches["valid"][0, 1] = False        # mask out a real mid-stream edge
+
+    rng = np.random.default_rng(11)
+    mask_edge = rng.random(n_edges) < 0.4          # stale per-edge length
+    mask_grid = np.zeros(steps * b, bool)
+    mask_grid[:n_edges] = mask_edge
+
+    eval_fn = make_eval_epoch(CFG)
+    state = init_state(CFG, g.num_nodes)
+    res = score_stream(params, CFG, state, batches, tables_j, eval_fn,
+                       inductive_edge_mask=mask_grid)
+    valid, pos, neg = _raw_logits(params, batches, tables_j)
+    m = mask_grid[valid]
+    want = link_prediction_metrics(pos[m], neg[m])
+    assert res["ap_inductive"] == want["ap"]
+    assert res["auc_inductive"] == want["auc"]
+
+    with pytest.raises(ValueError, match="inductive_edge_mask"):
+        score_stream(params, CFG, init_state(CFG, g.num_nodes), batches,
+                     tables_j, eval_fn, inductive_edge_mask=mask_edge)
+
+
+# ----------------------------------------------------- protocol parity
+
+def test_run_protocol_sharded_matches_evaluate_params(tmp_path):
+    """Acceptance: run_protocol over ShardedStream views == in-memory
+    evaluate_params (identical batch plan => identical metrics), and
+    prefetch on/off is bit-identical."""
+    g = synthetic_tig("tiny", seed=2)
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    sh = write_graph_shards(g, str(tmp_path / "sh"), shard_edges=311)
+
+    splits = split_views(sh)
+    tables_j = stage_device_tables(sh)
+    got = run_protocol(params, CFG, splits, tables_j, seed=3)
+    ref = evaluate_params(g, CFG, params, seed=3)
+    _metrics_equal(got, ref)
+    for k in ("val_ap", "val_auc", "test_ap", "test_auc"):
+        assert 0.0 <= got[k] <= 1.0
+
+    serial = run_protocol(params, CFG, splits, tables_j, seed=3,
+                          prefetch=False)
+    _metrics_equal(got, serial)
+
+
+def test_train_sharded_protocol_end_to_end(tmp_path):
+    """train_sharded(protocol=True): trains on the 70% view only, selects
+    on val, and reports through the same driver — metrics must equal
+    evaluate_params(best params) on the materialized graph."""
+    g = synthetic_tig("tiny", seed=4)
+    sh = write_graph_shards(g, str(tmp_path / "sh"), shard_edges=500)
+    res = train_sharded(sh, CFG, epochs=3, protocol=True, patience=2,
+                        seed=1)
+    assert res.metrics is not None
+    assert len(res.val_curve) == len(res.losses) <= 3
+    assert res.best_epoch == int(np.argmax(res.val_curve))
+    for k in ("val_ap", "val_auc", "test_ap", "test_auc"):
+        assert 0.0 <= res.metrics[k] <= 1.0
+    assert {"val_ap_inductive", "test_ap_inductive",
+            "test_auc_inductive", "node_auroc"} <= set(res.metrics)
+
+    ev = evaluate_params(sh.as_graph(), CFG, res.params, seed=1)
+    _metrics_equal(res.metrics, ev)
+
+
+def test_train_sharded_checkpoint_dir_and_early_stop_invariants(tmp_path):
+    g = synthetic_tig("tiny", seed=9)
+    sh = write_graph_shards(g, str(tmp_path / "sh"))
+    ck = str(tmp_path / "ck")
+    res = train_sharded(sh, CFG, epochs=2, protocol=True, patience=1,
+                        seed=0, ckpt_dir=ck)
+    # best-val params were kept via repro/checkpoint in the caller's dir
+    assert os.path.exists(
+        os.path.join(ck, f"ckpt_{res.best_epoch:08d}.npz"))
+    assert len(res.val_curve) <= 2
+
+
+def test_make_eval_epoch_program_cache():
+    a = make_eval_epoch(CFG)
+    b = make_eval_epoch(TIGConfig(**{
+        f.name: getattr(CFG, f.name)
+        for f in CFG.__dataclass_fields__.values()}))
+    assert a is b
+    assert make_eval_epoch(CFG, collect_embeddings=True) is not a
+
+
+# ------------------------------------------------- hypothesis properties
+# guarded per-test (not importorskip) so the deterministic tests above
+# still run when the optional dependency is absent
+
+try:
+    from hypothesis import assume, given, settings, strategies as st
+except ImportError:
+    st = None
+
+if st is not None:
+    @settings(max_examples=80, deadline=None)
+    @given(e=st.integers(0, 100_000),
+           tf=st.floats(0.05, 0.95),
+           vf=st.floats(0.0, 0.5))
+    def test_split_bounds_disjoint_chronological_cover(e, tf, vf):
+        assume(tf + vf <= 1.0)
+        n_tr, n_va = split_bounds(e, tf, vf)
+        # row ranges [0,n_tr) [n_tr,n_va) [n_va,e): disjoint by
+        # construction iff the bounds are ordered, covering iff they end
+        # at e; chronological because rows are one sorted stream.
+        assert 0 <= n_tr <= n_va <= e
+        assert n_tr + (n_va - n_tr) + (e - n_va) == e

@@ -17,6 +17,8 @@ from repro.tig.data import (
 from repro.tig.stream import (
     EpochPrefetcher,
     ShardedStream,
+    _parse_jodie_rows,
+    _parse_jodie_rows_fast,
     iter_jodie_blocks,
     stage_device_tables,
     write_graph_shards,
@@ -132,6 +134,64 @@ def test_iter_jodie_blocks_block_sizes(tmp_path):
     assert [len(b[0]) for b in blocks] == [2, 2, 1]
 
 
+# ----------------------------------------------- vectorized block parser
+
+CLEAN_CSV = "user_id,item_id,timestamp,state_label,f0,f1\n" + "".join(
+    f"{u},{u % 3},{ts},{ts % 2},{0.5 * u},{1.5 * ts}\n"
+    for ts, u in enumerate(range(40)))
+
+
+def test_fast_block_parser_matches_loop_on_clean_rows(tmp_path):
+    p = tmp_path / "ml_clean.csv"
+    p.write_text(CLEAN_CSV)
+    fast = list(iter_jodie_blocks(str(p), block_rows=16, fast=True))
+    slow = list(iter_jodie_blocks(str(p), block_rows=16, fast=False))
+    assert len(fast) == len(slow) == 3
+    for bf, bs in zip(fast, slow):
+        for cf, cs in zip(bf, bs):
+            np.testing.assert_array_equal(cf, cs)
+            assert cf.dtype == cs.dtype
+    # the clean block really takes the vectorized path
+    lines = CLEAN_CSV.splitlines(keepends=True)[1:]
+    assert _parse_jodie_rows_fast(lines, 2) is not None
+
+
+def test_fast_parser_falls_back_on_ragged_blocks(tmp_path):
+    # JODIE_CSV has ragged feature rows + an empty label -> the vectorized
+    # parser must bow out (None) and the block reader must produce results
+    # identical to the per-line loop.
+    lines = JODIE_CSV.splitlines(keepends=True)[1:]
+    assert _parse_jodie_rows_fast(lines, 3) is None
+    p = tmp_path / "ml_x.csv"
+    p.write_text(JODIE_CSV)
+    fast = list(iter_jodie_blocks(str(p), fast=True))
+    slow = list(iter_jodie_blocks(str(p), fast=False))
+    for bf, bs in zip(fast, slow):
+        for cf, cs in zip(bf, bs):
+            np.testing.assert_array_equal(cf, cs)
+
+
+def test_fast_parser_rejects_nonfinite_id_and_label_fields():
+    # nan/inf in int-bound columns would cast to INT64_MIN; the fast path
+    # must bow out so the per-line parser raises its proper diagnostic
+    assert _parse_jodie_rows_fast(["nan,1,2.0,0,0.5\n"], 1) is None
+    assert _parse_jodie_rows_fast(["0,inf,2.0,0,0.5\n"], 1) is None
+    assert _parse_jodie_rows_fast(["0,1,2.0,nan,0.5\n"], 1) is None
+    # nan in float columns (timestamp/features) is fine for both parsers
+    ok = _parse_jodie_rows_fast(["0,1,nan,0,nan\n"], 1)
+    assert ok is not None and np.isnan(ok[2][0]) and np.isnan(ok[4][0, 0])
+
+
+def test_fast_parser_pads_missing_feature_width():
+    # uniform 4-column rows but sniffed width 3: fast path must zero-pad
+    lines = ["0,1,2,1\n", "1,2,3,0\n"]
+    fast = _parse_jodie_rows_fast(lines, 3)
+    slow = _parse_jodie_rows(lines, 3)
+    assert fast is not None
+    for cf, cs in zip(fast, slow):
+        np.testing.assert_array_equal(cf, cs)
+
+
 # --------------------------------------------------------- device staging
 
 def test_stage_device_tables_matches_make_tables(tmp_path):
@@ -163,6 +223,13 @@ def test_prefetcher_order_and_results():
 def test_prefetcher_disabled_inline():
     pf = EpochPrefetcher(lambda ep: ep, 3, enabled=False)
     assert [pf.get(e) for e in range(3)] == [0, 1, 2]
+
+
+def test_prefetcher_close_detaches_pipeline():
+    pf = EpochPrefetcher(lambda ep: ep, 5)
+    assert pf.get(0) == 0            # submits epoch 1 in flight
+    pf.close()                       # early stop: drop pending plans
+    assert pf._futures == {} and pf._threads == {}
 
 
 def test_prefetcher_propagates_exceptions():
