@@ -1,0 +1,153 @@
+"""Kernel fwd/bwd microbenchmark: wall-time + modeled HBM bytes per backend.
+
+For each differentiable kernelized op (gru, temporal_attn, fused flush)
+and each backend:
+
+  * ``xla``                  — pure-jnp oracle forward, XLA autodiff bwd,
+  * ``interpret-oracle-vjp`` — Pallas kernel body (interpret mode on CPU)
+    forward, oracle-recompute VJP backward,
+  * ``interpret-fused-bwd``  — Pallas forward AND Pallas backward kernel
+    (flash-style in-kernel recompute; gru/attention only — the flush
+    backward is oracle-VJP by design),
+
+record forward and forward+backward wall time plus the modeled HBM bytes
+from ``repro.roofline.kernel_bytes`` for the matching pipeline.  Interpret
+mode executes kernels in Python, so its *wall time* is not meaningful as
+device time — the modeled bytes column is the roofline-relevant output,
+and the CSV is what CI uploads to track the fused-vs-oracle byte gap.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+from repro.roofline.kernel_bytes import attn_bytes, flush_bytes, gru_bytes
+
+REPS = 3
+
+
+def _time(fn, *args):
+    jax.tree.map(lambda x: x.block_until_ready(), fn(*args))   # compile
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def _gru_cases(b, d_in, d_h):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    args = (jax.random.normal(ks[0], (b, d_in)),
+            jax.random.normal(ks[1], (b, d_h)),
+            jax.random.normal(ks[2], (d_in, 3 * d_h)) * 0.3,
+            jax.random.normal(ks[3], (d_h, 3 * d_h)) * 0.3,
+            jax.random.normal(ks[4], (3 * d_h,)) * 0.1,
+            jax.random.normal(ks[5], (3 * d_h,)) * 0.1)
+
+    def fns(backend, bwd):
+        if backend == "xla":
+            f = ref.gru_ref
+        else:
+            f = lambda *a: ops.gru(*a, backend="interpret", bwd=bwd)
+        loss = lambda *a: jnp.sum(f(*a))
+        return jax.jit(f), jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))
+
+    model = lambda fused_f, fused_b: (
+        gru_bytes(b, d_in, d_h, direction="fwd", fused=fused_f).total,
+        gru_bytes(b, d_in, d_h, direction="bwd", fused=fused_b).total)
+    return args, fns, model, f"b={b},d_in={d_in},d_h={d_h}"
+
+
+def _attn_cases(b, k, h, d):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    args = (jax.random.normal(ks[0], (b, h, d)),
+            jax.random.normal(ks[1], (b, k, h, d)),
+            jax.random.normal(ks[2], (b, k, h, d)),
+            jax.random.uniform(ks[3], (b, k)) > 0.3)
+
+    def fns(backend, bwd):
+        if backend == "xla":
+            f = ref.temporal_attention_ref
+        else:
+            f = lambda *a: ops.temporal_attention(
+                *a, backend="interpret", bwd=bwd)
+        loss = lambda q, kk, v, m: jnp.sum(f(q, kk, v, m))
+        return jax.jit(f), jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+
+    model = lambda fused_f, fused_b: (
+        attn_bytes(b, k, h, d, direction="fwd", fused=fused_f).total,
+        attn_bytes(b, k, h, d, direction="bwd", fused=fused_b).total)
+    return args, fns, model, f"b={b},k={k},h={h},d={d}"
+
+
+def _flush_cases(n, rows, dm, d):
+    ks = jax.random.split(jax.random.PRNGKey(2), 8)
+    args = (jax.random.randint(ks[0], (rows,), 0, n + 1).astype(jnp.int32),
+            jax.random.normal(ks[1], (rows, dm)),
+            jax.random.uniform(ks[2], (rows,)) * 10,
+            jax.random.normal(ks[3], (n + 1, d)),
+            jax.random.uniform(ks[4], (n + 1,)),
+            jax.random.normal(ks[5], (dm, 3 * d)) * 0.3,
+            jax.random.normal(ks[6], (d, 3 * d)) * 0.3,
+            jax.random.normal(ks[7], (3 * d,)) * 0.1,
+            jnp.zeros((3 * d,)))
+
+    def fns(backend, bwd):
+        be = "xla" if backend == "xla" else "interpret"
+        f = lambda *a: ops.fused_flush(*a, backend=be)
+        loss = lambda *a: jnp.sum(f(*a)[0]) + jnp.sum(f(*a)[2])
+        return jax.jit(f), jax.jit(jax.grad(loss, argnums=(1, 5, 6, 7)))
+
+    model = lambda fused_f, fused_b: (
+        flush_bytes(n, rows, dm, d, direction="fwd", fused=fused_f).total,
+        flush_bytes(n, rows, dm, d, direction="bwd", fused=fused_b).total)
+    return args, fns, model, f"n={n},rows={rows},d_msg={dm},d_mem={d}"
+
+
+# backend -> (fwd pipeline fused?, bwd pipeline fused?, bwd mode string)
+BACKENDS = [
+    ("xla", False, False, "oracle"),
+    ("interpret-oracle-vjp", True, False, "oracle"),
+    ("interpret-fused-bwd", True, True, "fused"),
+]
+
+
+def run(fast: bool = True):
+    if fast:
+        cases = [("gru", _gru_cases(64, 48, 32)),
+                 ("temporal_attn", _attn_cases(64, 8, 2, 16)),
+                 ("flush", _flush_cases(512, 64, 48, 32))]
+    else:
+        cases = [("gru", _gru_cases(512, 176, 128)),
+                 ("temporal_attn", _attn_cases(600, 10, 2, 32)),
+                 ("flush", _flush_cases(100_000, 400, 176, 128))]
+
+    rows = []
+    for op, (args, fns, model, shape) in cases:
+        for backend, fused_f, fused_b, bwd in BACKENDS:
+            if op == "flush" and bwd == "fused":
+                continue       # flush backward is oracle-VJP by design
+            fwd_fn, bwd_fn = fns(backend, bwd)
+            mb_f, mb_b = model(fused_f, fused_b)
+            rows.append({
+                "op": op,
+                "backend": backend,
+                "shape": shape,
+                "t_fwd_ms": _time(fwd_fn, *args),
+                "t_fwd_bwd_ms": _time(bwd_fn, *args),
+                "model_fwd_mb": mb_f / 1e6,
+                "model_bwd_mb": mb_b / 1e6,
+            })
+    emit("kernel_backward", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,7 @@ import traceback
 
 MODULES = [
     "engine_speedup",
+    "kernel_backward",
     "ingest_prefetch",
     "protocol_sharded",
     "table3_efficiency",

@@ -1,0 +1,148 @@
+"""Fused TGN message-pipeline kernel — Pallas TPU.
+
+``flush_pending`` (repro.tig.models) applies the previous batch's stashed
+messages to node memory: segment-mean aggregation of the (R=2B, d_msg)
+pending messages per touched node, a GRU update of those nodes' memory
+rows, and a scatter of the new ``mem``/``last`` values.  The XLA path
+materializes two (N+1, d_msg) aggregation tables (scatter-add sums +
+counts), divides over the FULL table, gathers back, and functionally
+updates the (N+1, d) memory — O(N) HBM traffic per step for work that only
+touches 2B rows.  TGL (Zhou et al., 2022) identifies exactly this
+mailbox/memory-update scatter as the step-time bottleneck at scale.
+
+This kernel does the whole pipeline in one ``pallas_call`` with O(R) HBM
+traffic:
+
+  * grid over the R touched rows (+1 cleanup step), one row per step;
+  * ``ids`` ride in scalar-prefetch SMEM, so the BlockSpec index maps
+    gather row ``ids[i]`` of ``mem``/``last`` straight into VMEM and
+    scatter the results back — no aggregation tables, no O(N) pass;
+  * the segment mean is an equality-mask matvec against the VMEM-resident
+    (R, d_msg) message block: rows of one node see identical ``mbar``;
+  * gate math (the GRU) runs in VMEM on the gathered row;
+  * ``mem``/``last`` are input/output-aliased, so untouched rows are
+    untouched in HBM.
+
+Duplicate ids write identical values, but a *later* duplicate would
+re-read a row the first occurrence already updated (the buffers are
+aliased), so the wrapper redirects every non-first occurrence's write to
+the dump row, which the final grid step re-zeroes anyway.  Reads of
+already-written rows then only happen for rows whose output is discarded.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_flush_fwd"]
+
+
+def _flush_kernel(ids_r_ref, ids_w_ref, msg_ref, ids_v_ref, ts_ref,
+                  mem_ref, last_ref, wx_ref, wh_ref, bx_ref, bh_ref,
+                  mem_out_ref, last_out_ref, mbar_ref, *, n_rows, n_dump):
+    i = pl.program_id(0)
+
+    @pl.when(i >= n_rows)
+    def _zero_dump():
+        # final step: the dump row collected padding + duplicate writes
+        mem_out_ref[...] = jnp.zeros_like(mem_out_ref)
+        last_out_ref[...] = jnp.zeros_like(last_out_ref)
+
+    @pl.when(i < n_rows)
+    def _row():
+        f32 = jnp.float32
+        id_i = ids_r_ref[i]
+        ids_v = ids_v_ref[...]                       # (1, R) int32
+        live = ids_v < n_dump
+        eq = jnp.logical_and(ids_v == id_i, live)    # (1, R)
+        eqf = eq.astype(f32)
+
+        # segment mean over this node's pending rows (msg resident in VMEM)
+        cnt = jnp.sum(eqf)
+        sums = jnp.dot(eqf, msg_ref[...].astype(f32),
+                       preferred_element_type=f32)   # (1, dm)
+        mbar = sums / jnp.maximum(cnt, 1.0)
+
+        # GRU gate math in VMEM on the gathered memory row
+        s_old = mem_ref[...].astype(f32)             # (1, d)
+        gx = jnp.dot(mbar, wx_ref[...].astype(f32),
+                     preferred_element_type=f32) + bx_ref[...]
+        gh = jnp.dot(s_old, wh_ref[...].astype(f32),
+                     preferred_element_type=f32) + bh_ref[...]
+        d_h = s_old.shape[-1]
+        r = jax.nn.sigmoid(gx[:, :d_h] + gh[:, :d_h])
+        z = jax.nn.sigmoid(gx[:, d_h:2 * d_h] + gh[:, d_h:2 * d_h])
+        n = jnp.tanh(gx[:, 2 * d_h:] + r * gh[:, 2 * d_h:])
+        s_new = (1.0 - z) * n + z * s_old
+
+        tmax = jnp.max(jnp.where(eq, ts_ref[...], -3.4e38))
+        mem_out_ref[...] = s_new.astype(mem_out_ref.dtype)
+        last_out_ref[...] = jnp.maximum(
+            last_ref[...], tmax).astype(last_out_ref.dtype)
+        mbar_ref[...] = mbar.astype(mbar_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_flush_fwd(ids, msg, ts, mem, last, wx, wh, bx, bh, *,
+                    interpret: bool = False):
+    """Segment-mean + GRU + scatter in one launch.
+
+    ids: (R,) int32; msg: (R, dm); ts: (R,); mem: (N+1, d); last: (N+1,);
+    GRU weights as in ``ref.gru_ref``.  Returns ``(mem', last', mbar)``
+    matching ``ref.flush_ref``.
+    """
+    n_rows, dm = msg.shape
+    n1, d = mem.shape
+    n_dump = n1 - 1
+    ids = ids.astype(jnp.int32)
+
+    # redirect non-first duplicate writes to the dump row (see module doc)
+    dup = jnp.tril(ids[:, None] == ids[None, :], k=-1).any(axis=1)
+    pad = jnp.full((1,), n_dump, jnp.int32)
+    ids_r = jnp.concatenate([ids, pad])
+    ids_w = jnp.concatenate([jnp.where(dup, n_dump, ids), pad])
+
+    kernel = functools.partial(_flush_kernel, n_rows=n_rows, n_dump=n_dump)
+    const2 = lambda rows, cols: pl.BlockSpec(
+        (rows, cols), lambda i, ir, iw: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_rows + 1,),
+        in_specs=[
+            const2(n_rows, dm),                               # msg
+            const2(1, n_rows),                                # ids (vector)
+            const2(1, n_rows),                                # ts  (vector)
+            pl.BlockSpec((1, d), lambda i, ir, iw: (ir[i], 0)),   # mem row
+            pl.BlockSpec((1, 1), lambda i, ir, iw: (ir[i], 0)),   # last row
+            const2(dm, 3 * d),                                # wx
+            const2(d, 3 * d),                                 # wh
+            const2(1, 3 * d),                                 # bx
+            const2(1, 3 * d),                                 # bh
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, ir, iw: (iw[i], 0)),   # mem'
+            pl.BlockSpec((1, 1), lambda i, ir, iw: (iw[i], 0)),   # last'
+            pl.BlockSpec(
+                (1, dm),
+                lambda i, ir, iw: (jnp.minimum(i, n_rows - 1), 0)),  # mbar
+        ],
+    )
+    mem_out, last_out, mbar = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n1, d), mem.dtype),
+            jax.ShapeDtypeStruct((n1, 1), last.dtype),
+            jax.ShapeDtypeStruct((n_rows, dm), msg.dtype),
+        ],
+        # inputs count scalar-prefetch args: 5 = mem, 6 = last
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(ids_r, ids_w, msg, ids[None, :], ts[None, :].astype(last.dtype),
+      mem, last[:, None], wx, wh, bx[None, :], bh[None, :])
+    return mem_out, last_out[:, 0], mbar

@@ -12,6 +12,16 @@ Each op picks its execution path:
 ``REPRO_KERNEL_BACKEND`` environment variable overrides the "auto"
 resolution (e.g. ``REPRO_KERNEL_BACKEND=interpret`` exercises the Pallas
 kernel bodies on CPU without touching any config).
+
+Backward passes: the differentiable ops (``gru``, ``temporal_attention``,
+``fused_flush``) carry custom VJPs.  For gru/attention the default
+backward is a real Pallas kernel (flash-style in-kernel recompute from the
+input residuals — one HBM pass per operand); ``bwd="oracle"`` (or
+``REPRO_KERNEL_BWD=oracle``) falls back to differentiating the pure-jnp
+oracle from ``ref.py``, which is the parity reference and what the
+``"xla"`` backend uses implicitly.  ``fused_flush`` always differentiates
+through its oracle (``ref.flush_ref``) — the backward is dominated by the
+same scatter/gather XLA handles for the forward XLA path.
 """
 
 from __future__ import annotations
@@ -23,12 +33,15 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _fa_pallas
+from repro.kernels.fused_flush import fused_flush_fwd as _flush_pallas
 from repro.kernels.fused_gru import fused_gru as _gru_pallas
+from repro.kernels.fused_gru import fused_gru_bwd as _gru_bwd_pallas
 from repro.kernels.rwkv6_scan import rwkv6_chunked as _wkv_pallas
 from repro.kernels.temporal_attn import temporal_attn as _tattn_pallas
+from repro.kernels.temporal_attn import temporal_attn_bwd as _tattn_bwd_pallas
 
-__all__ = ["default_backend", "gru", "temporal_attention",
-           "flash_attention", "rwkv6"]
+__all__ = ["default_backend", "default_bwd", "gru", "temporal_attention",
+           "fused_flush", "flash_attention", "rwkv6"]
 
 
 @functools.cache
@@ -53,61 +66,118 @@ def _resolve(backend: str | None) -> str:
     return default_backend()
 
 
-# The TIG training scan differentiates through the fused kernels, but raw
-# ``pallas_call`` has no transpose rule.  Standard fix: custom VJP — fused
-# Pallas forward, pure-jnp oracle (ref.py) recomputation backward.  The
-# oracles are exact (the kernels are validated against them), so gradients
-# are identical to the XLA path.
+def default_bwd() -> str:
+    env = os.environ.get("REPRO_KERNEL_BWD")
+    if env:
+        if env not in ("fused", "oracle"):
+            raise ValueError(
+                f"REPRO_KERNEL_BWD={env!r}: expected fused / oracle")
+        return env
+    return "fused"
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
-def _gru_fused(x, h, wx, wh, bx, bh, interpret):
+
+def _resolve_bwd(bwd: str | None) -> str:
+    return bwd if bwd not in (None, "auto") else default_bwd()
+
+
+# The TIG training scan differentiates through the fused kernels, but raw
+# ``pallas_call`` has no transpose rule.  Fix: custom VJP.  The default
+# backward (``bwd="fused"``) is a real Pallas kernel that recomputes the
+# gates/softmax in VMEM from the input residuals; ``bwd="oracle"`` keeps
+# the original fallback — differentiate the pure-jnp oracle (ref.py),
+# recomputing the forward through XLA.  Both produce gradients identical
+# to the XLA path (the kernels are validated against the oracles).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _gru_fused(x, h, wx, wh, bx, bh, interpret, bwd):
     return _gru_pallas(x, h, wx, wh, bx, bh, interpret=interpret)
 
 
-def _gru_fused_fwd(x, h, wx, wh, bx, bh, interpret):
-    return _gru_fused(x, h, wx, wh, bx, bh, interpret), (x, h, wx, wh, bx, bh)
+def _gru_fused_fwd(x, h, wx, wh, bx, bh, interpret, bwd):
+    return (_gru_fused(x, h, wx, wh, bx, bh, interpret, bwd),
+            (x, h, wx, wh, bx, bh))
 
 
-def _gru_fused_bwd(interpret, res, g):
-    _, vjp = jax.vjp(ref.gru_ref, *res)
-    return vjp(g)
+def _gru_fused_bwd(interpret, bwd, res, g):
+    if bwd == "oracle":
+        _, vjp = jax.vjp(ref.gru_ref, *res)
+        return vjp(g)
+    return _gru_bwd_pallas(g, *res, interpret=interpret)
 
 
 _gru_fused.defvjp(_gru_fused_fwd, _gru_fused_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _tattn_fused(q, k, v, mask, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _tattn_fused(q, k, v, mask, interpret, bwd):
     return _tattn_pallas(q, k, v, mask, interpret=interpret)
 
 
-def _tattn_fused_fwd(q, k, v, mask, interpret):
-    return _tattn_fused(q, k, v, mask, interpret), (q, k, v, mask)
+def _tattn_fused_fwd(q, k, v, mask, interpret, bwd):
+    return _tattn_fused(q, k, v, mask, interpret, bwd), (q, k, v, mask)
 
 
-def _tattn_fused_bwd(interpret, res, g):
+def _tattn_fused_bwd(interpret, bwd, res, g):
     q, k, v, mask = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: ref.temporal_attention_ref(q_, k_, v_, mask),
-        q, k, v)
-    return (*vjp(g), None)
+    if bwd == "oracle":
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: ref.temporal_attention_ref(q_, k_, v_, mask),
+            q, k, v)
+        return (*vjp(g), None)
+    return (*_tattn_bwd_pallas(g, q, k, v, mask, interpret=interpret), None)
 
 
 _tattn_fused.defvjp(_tattn_fused_fwd, _tattn_fused_bwd)
 
 
-def gru(x, h, wx, wh, bx, bh, *, backend: str | None = None):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(9,))
+def _flush_fused(ids, msg, ts, mem, last, wx, wh, bx, bh, interpret):
+    return _flush_pallas(ids, msg, ts, mem, last, wx, wh, bx, bh,
+                         interpret=interpret)
+
+
+def _flush_fused_fwd(ids, msg, ts, mem, last, wx, wh, bx, bh, interpret):
+    return (_flush_fused(ids, msg, ts, mem, last, wx, wh, bx, bh, interpret),
+            (ids, msg, ts, mem, last, wx, wh, bx, bh))
+
+
+def _flush_fused_bwd(interpret, res, g):
+    ids = res[0]
+    _, vjp = jax.vjp(
+        lambda *diff: ref.flush_ref(ids, *diff), *res[1:])
+    return (None, *vjp(g))
+
+
+_flush_fused.defvjp(_flush_fused_fwd, _flush_fused_bwd)
+
+
+def gru(x, h, wx, wh, bx, bh, *, backend: str | None = None,
+        bwd: str | None = None):
     b = _resolve(backend)
     if b in ("xla", "scan"):   # "scan" only exists for rwkv6 -> oracle here
         return ref.gru_ref(x, h, wx, wh, bx, bh)
-    return _gru_fused(x, h, wx, wh, bx, bh, b == "interpret")
+    return _gru_fused(x, h, wx, wh, bx, bh, b == "interpret",
+                      _resolve_bwd(bwd))
 
 
-def temporal_attention(q, k, v, mask, *, backend: str | None = None):
+def temporal_attention(q, k, v, mask, *, backend: str | None = None,
+                       bwd: str | None = None):
     b = _resolve(backend)
     if b in ("xla", "scan"):
         return ref.temporal_attention_ref(q, k, v, mask)
-    return _tattn_fused(q, k, v, mask, b == "interpret")
+    return _tattn_fused(q, k, v, mask, b == "interpret", _resolve_bwd(bwd))
+
+
+def fused_flush(ids, msg, ts, mem, last, wx, wh, bx, bh, *,
+                backend: str | None = None):
+    """The whole ``flush_pending`` message pipeline (segment-mean + GRU +
+    mem/last scatter) as one kernel; ``(mem', last', mbar)``.  Backward is
+    always the ``ref.flush_ref`` oracle VJP."""
+    b = _resolve(backend)
+    if b in ("xla", "scan"):
+        return ref.flush_ref(ids, msg, ts, mem, last, wx, wh, bx, bh)
+    return _flush_fused(ids, msg, ts, mem, last, wx, wh, bx, bh,
+                        b == "interpret")
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 __all__ = [
     "gru_ref",
     "temporal_attention_ref",
+    "flush_ref",
     "flash_attention_ref",
     "rwkv6_ref",
     "rwkv6_chunked_xla",
@@ -47,6 +48,34 @@ def temporal_attention_ref(q, k, v, mask):
     att = jax.nn.softmax(scores, axis=-1)
     att = jnp.where(mask.any(-1)[:, None, None], att, 0.0)
     return jnp.einsum("bhk,bkhd->bhd", att, v)
+
+
+def flush_ref(ids, msg, ts, mem, last, wx, wh, bx, bh):
+    """Message-pipeline oracle: segment-mean aggregation of the pending
+    messages + GRU memory update + scatter of ``mem``/``last``.
+
+    This is exactly the XLA path of ``repro.tig.models.flush_pending`` for
+    the GRU flavors (the fused Pallas kernel in ``fused_flush.py`` is
+    validated against it, and its custom VJP recomputes through it).
+
+    ids: (R,) int32 touched rows (dump row ``mem.shape[0]-1`` = padding);
+    msg: (R, dm) post-MSG messages; ts: (R,) event times; mem: (N+1, d);
+    last: (N+1,); wx/wh/bx/bh: GRU gate parameters.
+    Returns ``(mem', last', mbar)`` with ``mbar`` the (R, dm) per-row
+    aggregated messages (consumed by TIGE's second-memory update).
+    """
+    n_dump = mem.shape[0] - 1
+    live = ids < n_dump
+    zeros = jnp.zeros((n_dump + 1, msg.shape[-1]), msg.dtype)
+    sums = zeros.at[ids].add(jnp.where(live[:, None], msg, 0.0))
+    cnt = jnp.zeros((n_dump + 1,), msg.dtype).at[ids].add(
+        live.astype(msg.dtype))
+    mbar_tbl = sums / jnp.clip(cnt, 1.0)[:, None]
+    mbar = mbar_tbl[ids]
+    s_new = gru_ref(mbar, mem[ids], wx, wh, bx, bh)
+    mem = mem.at[ids].set(s_new).at[n_dump].set(0.0)
+    last = last.at[ids].max(jnp.where(live, ts, 0.0)).at[n_dump].set(0.0)
+    return mem, last, mbar
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):

@@ -1,10 +1,16 @@
-"""Temporal neighbor attention — Pallas TPU kernel.
+"""Temporal neighbor attention — Pallas TPU kernels (forward and backward).
 
 The TGN/TIGE embedding module attends from each node over its K sampled
 temporal neighbors (K is small, 10-32).  XLA handles the einsums fine but
 round-trips the (B, H, K) score tensor and the (B, K, H, D) projections
 through HBM; with K this small the whole per-row working set fits VMEM, so
 we fuse QK^T -> mask -> softmax -> AV into one kernel.
+
+The backward kernel is flash-attention-style: scores and the softmax are
+recomputed in VMEM from (q, k, v, mask) — nothing but the inputs is saved
+as residuals — so the backward pass makes one HBM read per operand and one
+write per gradient instead of round-tripping the (B, H, K) attention
+tensor and its cotangent chain through HBM.
 
 Tiling: grid over row blocks (block_b); K and the head dims live entirely in
 registers/VMEM.  The mask handles both empty slots and rows with zero
@@ -20,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["temporal_attn"]
+__all__ = ["temporal_attn", "temporal_attn_bwd"]
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref):
@@ -65,3 +71,58 @@ def temporal_attn(q, k, v, mask, *, block_b: int = 128,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         interpret=interpret,
     )(q, k, v, mask)
+
+
+def _attn_bwd_kernel(g_ref, q_ref, k_ref, v_ref, mask_ref,
+                     dq_ref, dk_ref, dv_ref):
+    g = g_ref[...].astype(jnp.float32)           # (b, H, D)
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)           # (b, K, H, D)
+    v = v_ref[...].astype(jnp.float32)
+    mask = mask_ref[...]                         # (b, K) bool
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+
+    # in-VMEM softmax recompute (identical math to the forward kernel)
+    scores = jnp.einsum("bhd,bkhd->bhk", q, k) * scale
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    att = e / jnp.sum(e, axis=-1, keepdims=True)
+    att = jnp.where(mask.any(axis=-1)[:, None, None], att, 0.0)
+
+    # masked slots have att == 0, so the softmax-backward formula below
+    # already routes zero gradient to them (and to zero-neighbor rows)
+    dv = jnp.einsum("bhk,bhd->bkhd", att, g)
+    datt = jnp.einsum("bhd,bkhd->bhk", g, v)
+    ds = att * (datt - jnp.sum(att * datt, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhk,bkhd->bhd", ds, k) * scale
+    dk = jnp.einsum("bhk,bhd->bkhd", ds, q) * scale
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def temporal_attn_bwd(g, q, k, v, mask, *, block_b: int = 128,
+                      interpret: bool = False):
+    """One-pass attention backward: (dq, dk, dv) from the output cotangent
+    ``g`` and the forward inputs (softmax recomputed in VMEM)."""
+    b, h, d = q.shape
+    kk = k.shape[1]
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    row3 = pl.BlockSpec((block_b, h, d), lambda i: (i, 0, 0))
+    row4 = pl.BlockSpec((block_b, kk, h, d), lambda i: (i, 0, 0, 0))
+    return pl.pallas_call(
+        _attn_bwd_kernel,
+        grid=grid,
+        in_specs=[row3, row3, row4, row4,
+                  pl.BlockSpec((block_b, kk), lambda i: (i, 0))],
+        out_specs=[row3, row4, row4],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        interpret=interpret,
+    )(g, q, k, v, mask)

@@ -1,0 +1,243 @@
+"""Analytic per-step HBM-byte models: fused Pallas vs unfused XLA pipelines.
+
+Companion to the compiled-HLO analyzer (``analysis.py``): that one measures
+whatever XLA emitted; this one models what each kernel *must* move, so the
+fused kernels in ``repro.kernels`` can be compared against the unfused XLA
+lowering (and against the oracle-VJP backward, which replays the unfused
+forward) without a TPU attached.
+
+Modeling conventions (documented per op below):
+
+  * one read per operand a kernel consumes, one write per tensor it
+    produces — VMEM-resident reuse inside a fused kernel is free;
+  * the unfused XLA pipelines are modeled at kernel-fusion granularity:
+    matmuls/einsums materialize their outputs, the elementwise chains
+    between them are assumed perfectly fused by XLA (generous to XLA);
+  * the oracle-VJP backward replays the unfused forward (its residuals are
+    the inputs) and materializes the gate/attention cotangents, exactly
+    like ``jax.vjp`` over ``ref.py``;
+  * scatters are modeled in-place (donated buffers inside the epoch scan):
+    read + write of the touched rows only.  The O(N) terms charged to the
+    unfused flush are the aggregation *tables* it genuinely materializes.
+
+Every model returns an ``OpBytes`` with an itemized ``reads``/``writes``
+dict so benchmark CSVs can show where the bytes go.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["OpBytes", "gru_bytes", "attn_bytes", "flush_bytes",
+           "step_pipeline_bytes"]
+
+F32 = 4
+MASK = 1       # bool
+
+
+@dataclasses.dataclass(frozen=True)
+class OpBytes:
+    op: str
+    direction: str          # "fwd" | "bwd"
+    pipeline: str           # "fused" | "unfused" | "oracle"
+    reads: dict
+    writes: dict
+
+    @property
+    def read_bytes(self) -> int:
+        return int(sum(self.reads.values()))
+
+    @property
+    def write_bytes(self) -> int:
+        return int(sum(self.writes.values()))
+
+    @property
+    def total(self) -> int:
+        return self.read_bytes + self.write_bytes
+
+
+def _merge(*dicts):
+    out: dict = {}
+    for d in dicts:
+        for k, v in d.items():
+            out[k] = out.get(k, 0) + v
+    return out
+
+
+# ------------------------------------------------------------------- GRU
+
+def gru_bytes(b, d_in, d_h, *, direction="fwd", fused=True,
+              itemsize=F32) -> OpBytes:
+    """h' = GRU(x, h) over (b, d_in) x (b, d_h) rows.
+
+    unfused fwd: two gate matmuls materialize gx/gh (b, 3*d_h) in HBM, a
+    fused elementwise kernel re-reads them plus h.  oracle bwd: replays
+    that forward, materializes the r/z/n/nh residuals and the dgx/dgh gate
+    cotangents, then runs 4 matmuls over them.  fused bwd: recomputes the
+    gates in VMEM — one read per operand, one write per gradient.
+    """
+    x, h = b * d_in * itemsize, b * d_h * itemsize
+    wx, wh = d_in * 3 * d_h * itemsize, d_h * 3 * d_h * itemsize
+    bias = 2 * 3 * d_h * itemsize
+    gates = b * 3 * d_h * itemsize          # one of gx / gh / dgx / dgh
+    operands = {"x": x, "h": h, "wx": wx, "wh": wh, "bias": bias}
+
+    if direction == "fwd":
+        if fused:
+            return OpBytes("gru", "fwd", "fused", operands, {"out": h})
+        return OpBytes(
+            "gru", "fwd", "unfused",
+            _merge(operands, {"gx_gh_reread": 2 * gates, "h_reread": h}),
+            {"gx_gh": 2 * gates, "out": h})
+
+    grads = {"dx": x, "dh": h, "dwx": wx, "dwh": wh, "dbias": bias}
+    if fused:
+        return OpBytes("gru", "bwd", "fused",
+                       _merge(operands, {"g": h}), grads)
+    # oracle-VJP: forward replay + residual/cotangent round-trips
+    replay_r = _merge(operands, {"gx_gh_reread": 2 * gates, "h_reread": h})
+    replay_w = {"gx_gh": 2 * gates, "rznn_residuals": 4 * h}
+    bwd_r = {"g": h, "rznn_residuals": 4 * h, "h_bwd": h,
+             "dgx_dgh_reread": 2 * 2 * gates,      # dx/dwx + dh/dwh matmuls
+             "x_bwd": x, "wx_bwd": wx, "wh_bwd": wh}
+    bwd_w = {"dgx_dgh": 2 * gates}
+    return OpBytes("gru", "bwd", "oracle",
+                   _merge(replay_r, bwd_r),
+                   _merge(replay_w, bwd_w, grads))
+
+
+# ------------------------------------------------------- temporal attention
+
+def attn_bytes(b, k, h, d, *, direction="fwd", fused=True,
+               itemsize=F32) -> OpBytes:
+    """Masked neighbor attention over q (b,h,d), k/v (b,k,h,d), mask (b,k).
+
+    unfused fwd: QK^T materializes scores (b,h,k), softmax+zero-fix
+    re-reads/rewrites them, AV re-reads.  oracle bwd: replays that, then
+    materializes datt/ds cotangents for the dq/dk/dv einsums.  fused bwd:
+    softmax recomputed in VMEM — one pass per operand/gradient.
+    """
+    q = b * h * d * itemsize
+    kv = b * k * h * d * itemsize
+    mask = b * k * MASK
+    sc = b * h * k * itemsize               # one scores-shaped tensor
+    operands = {"q": q, "k": kv, "v": kv, "mask": mask}
+
+    if direction == "fwd":
+        if fused:
+            return OpBytes("temporal_attn", "fwd", "fused",
+                           operands, {"out": q})
+        return OpBytes(
+            "temporal_attn", "fwd", "unfused",
+            _merge(operands, {"scores_reread": sc, "att_reread": sc}),
+            {"scores": sc, "att": sc, "out": q})
+
+    grads = {"dq": q, "dk": kv, "dv": kv}
+    if fused:
+        return OpBytes("temporal_attn", "bwd", "fused",
+                       _merge(operands, {"g": q}), grads)
+    replay_r = _merge(operands, {"scores_reread": sc, "att_reread": sc})
+    replay_w = {"scores": sc, "att": sc}
+    bwd_r = {"g": 2 * q,                    # datt einsum + dv einsum
+             "v_bwd": kv, "att_bwd": 2 * sc,
+             "datt": sc, "ds_reread": 2 * sc,    # dq + dk einsums
+             "k_bwd": kv, "q_bwd": q}
+    bwd_w = {"datt": sc, "ds": sc}
+    return OpBytes("temporal_attn", "bwd", "oracle",
+                   _merge(replay_r, bwd_r),
+                   _merge(replay_w, bwd_w, grads))
+
+
+# ------------------------------------------------------------ message flush
+
+def flush_bytes(n_nodes, rows, d_msg, d_mem, *, direction="fwd", fused=True,
+                itemsize=F32) -> OpBytes:
+    """The flush_pending message pipeline: segment-mean over ``rows``
+    (=2B) pending messages, GRU update, scatter of mem/last.
+
+    unfused fwd: materializes the (N+1, d_msg) scatter-add sums table and
+    the (N+1,) counts, divides over the FULL table (read+write), gathers
+    back, then runs the unfused GRU on the touched rows — O(N) traffic for
+    O(rows) work.  fused fwd: one Pallas launch touching only the ``rows``
+    gathered memory rows (+ weights); no tables.  bwd is the oracle VJP in
+    both pipelines (it replays the unfused forward and emits a full-table
+    memory cotangent) — the fused win in the backward comes from the GRU /
+    attention kernels, not the flush.
+    """
+    msg = rows * d_msg * itemsize
+    memrows = rows * d_mem * itemsize
+    ids = rows * 4
+    ts = rows * itemsize
+    tbl = (n_nodes + 1) * d_msg * itemsize      # sums / mbar table
+    cnt = (n_nodes + 1) * itemsize
+    wx = d_msg * 3 * d_mem * itemsize
+    wh = d_mem * 3 * d_mem * itemsize
+    bias = 2 * 3 * d_mem * itemsize
+    weights = {"wx": wx, "wh": wh, "bias": bias}
+
+    if direction == "fwd":
+        if fused:
+            return OpBytes(
+                "flush", "fwd", "fused",
+                _merge({"msg": msg, "ids": 3 * ids, "ts": ts,
+                        "mem_rows": memrows, "last_rows": ts}, weights),
+                {"mem_rows": memrows, "last_rows": ts, "mbar": msg})
+        gru_u = gru_bytes(rows, d_msg, d_mem, fused=False,
+                          itemsize=itemsize)
+        return OpBytes(
+            "flush", "fwd", "unfused",
+            _merge({"msg": msg, "ids": ids, "ts": ts,
+                    "sums_tbl_scatter": msg, "cnt_scatter": ts,
+                    "sums_cnt_tbl_div": tbl + cnt,
+                    "mbar_tbl_gather": msg,
+                    "mem_rows": memrows, "last_rows": ts},
+                   {k: v for k, v in gru_u.reads.items()
+                    if k not in ("x", "h")}),
+            _merge({"sums_tbl_zeros": tbl, "cnt_zeros": cnt,
+                    "mbar_tbl": tbl,
+                    "mem_rows": memrows, "last_rows": ts, "mbar": msg},
+                   {k: v for k, v in gru_u.writes.items() if k != "out"}))
+
+    # oracle VJP either way: unfused forward replay + cotangent tables
+    fwd_u = flush_bytes(n_nodes, rows, d_msg, d_mem,
+                        direction="fwd", fused=False, itemsize=itemsize)
+    gru_b = gru_bytes(rows, d_msg, d_mem, direction="bwd", fused=False,
+                      itemsize=itemsize)
+    return OpBytes(
+        "flush", "bwd", "oracle",
+        _merge(fwd_u.reads, {"g_mem": (n_nodes + 1) * d_mem * itemsize,
+                             "g_mbar": msg},
+               {k: v for k, v in gru_b.reads.items() if k not in ("x", "h")}),
+        _merge({"dmsg": msg, "dmem_tbl": (n_nodes + 1) * d_mem * itemsize,
+                "dsums_tbl": tbl, "dmbar": 2 * msg},
+               {k: v for k, v in gru_b.writes.items()
+                if k not in ("dx", "dh")}))
+
+
+# --------------------------------------------------------------- whole step
+
+def step_pipeline_bytes(n_nodes, batch, d_msg, d_mem, k_neighbors, n_heads,
+                        *, itemsize=F32) -> dict:
+    """Modeled HBM bytes for the kernelized portion of one training step
+    (flush pipeline + the 3B-row embedding attention), fwd + bwd, fused vs
+    unfused.  Returns {"fused": bytes, "unfused": bytes, "detail": [...]}.
+    """
+    head_d = d_mem // n_heads
+    out = {}
+    detail = []
+    for pipeline in ("fused", "unfused"):
+        fused = pipeline == "fused"
+        parts = [
+            flush_bytes(n_nodes, 2 * batch, d_msg, d_mem,
+                        direction="fwd", fused=fused, itemsize=itemsize),
+            flush_bytes(n_nodes, 2 * batch, d_msg, d_mem,
+                        direction="bwd", fused=fused, itemsize=itemsize),
+            attn_bytes(3 * batch, k_neighbors, n_heads, head_d,
+                       direction="fwd", fused=fused, itemsize=itemsize),
+            attn_bytes(3 * batch, k_neighbors, n_heads, head_d,
+                       direction="bwd", fused=fused, itemsize=itemsize),
+        ]
+        out[pipeline] = sum(p.total for p in parts)
+        detail.extend(parts)
+    out["detail"] = detail
+    return out

@@ -162,24 +162,28 @@ def scan_eval_stream(
 
 
 _EVAL_PROGRAMS: dict = {}
-_EVAL_PROGRAMS_MAX = 32          # bounded: evict oldest, don't pin every
-                                 # compiled program for process lifetime
+_EVAL_PROGRAMS_MAX = 32          # bounded LRU: evict least-recently-USED,
+                                 # don't pin every compiled program for
+                                 # process lifetime
 
 
 def make_eval_epoch(cfg: TIGConfig, *, collect_embeddings: bool = False):
     """jit'd eval-stream program: (params, state, batches, tables) ->
     (state, stacked aux).
 
-    Programs are cached per (cfg, collect_embeddings): per-epoch validation
-    during training, the protocol driver's train replay, and final scoring
-    all reuse one compiled scan instead of re-tracing a fresh ``jax.jit``
-    wrapper on every call.
+    Programs are cached per (cfg, collect_embeddings) with LRU eviction
+    (hits move to the back of the dict, the front is evicted): per-epoch
+    validation during training, the protocol driver's train replay, and
+    final scoring all reuse one compiled scan instead of re-tracing a
+    fresh ``jax.jit`` wrapper on every call, and an alternating
+    train/val/protocol workload cycling through >32 configs can't thrash
+    a program it keeps coming back to.
 
     No buffer donation here: callers legitimately reuse the input state
     (e.g. train_single evaluates val from the epoch-end memory it also
     keeps for the returned result)."""
     key = (dataclasses.astuple(cfg), collect_embeddings)
-    fn = _EVAL_PROGRAMS.get(key)
+    fn = _EVAL_PROGRAMS.pop(key, None)
     if fn is None:
         while len(_EVAL_PROGRAMS) >= _EVAL_PROGRAMS_MAX:
             _EVAL_PROGRAMS.pop(next(iter(_EVAL_PROGRAMS)))
@@ -188,5 +192,5 @@ def make_eval_epoch(cfg: TIGConfig, *, collect_embeddings: bool = False):
         fn = jax.jit(functools.partial(
             scan_eval_stream, cfg=dataclasses.replace(cfg),
             collect_embeddings=collect_embeddings))
-        _EVAL_PROGRAMS[key] = fn
+    _EVAL_PROGRAMS[key] = fn   # (re-)insert at the back: most recent
     return fn

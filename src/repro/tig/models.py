@@ -170,34 +170,35 @@ def flush_pending(params: dict, cfg: TIGConfig, state: dict) -> dict:
 
     msg = mlp(params["msg"], raw) if cfg.message_fn == "mlp" else raw
 
-    # mean-aggregate messages per node (paper: "simply mean message")
-    zeros = jnp.zeros((n_dump + 1, cfg.msg_dim), msg.dtype)
-    sums = zeros.at[ids].add(jnp.where(live[:, None], msg, 0.0))
-    cnt = jnp.zeros((n_dump + 1,), msg.dtype).at[ids].add(
-        live.astype(msg.dtype))
-    mbar_tbl = sums / jnp.clip(cnt, 1.0)[:, None]
-
-    mbar = mbar_tbl[ids]                       # (2B, dm)
-    s_old = state["mem"][ids]
     if cfg.updater == "gru" and cfg.use_pallas:
+        # fused message pipeline: segment-mean + GRU + mem/last scatter in
+        # one Pallas launch — O(2B) HBM traffic instead of the O(N)
+        # aggregation tables + functional scatter below
         from repro.kernels import ops
         p = params["upd"]
-        s_new = ops.gru(mbar, s_old, p["xz"]["w"], p["hz"]["w"],
-                        p["xz"]["b"], p["hz"]["b"],
-                        backend=cfg.kernel_backend)
+        mem, last, mbar = ops.fused_flush(
+            ids, msg, ts, state["mem"], state["last"],
+            p["xz"]["w"], p["hz"]["w"], p["xz"]["b"], p["hz"]["b"],
+            backend=cfg.kernel_backend)
     else:
+        # mean-aggregate messages per node (paper: "simply mean message")
+        zeros = jnp.zeros((n_dump + 1, cfg.msg_dim), msg.dtype)
+        sums = zeros.at[ids].add(jnp.where(live[:, None], msg, 0.0))
+        cnt = jnp.zeros((n_dump + 1,), msg.dtype).at[ids].add(
+            live.astype(msg.dtype))
+        mbar_tbl = sums / jnp.clip(cnt, 1.0)[:, None]
+
+        mbar = mbar_tbl[ids]                   # (2B, dm)
         upd_fn = gru if cfg.updater == "gru" else rnn
-        s_new = upd_fn(params["upd"], mbar, s_old)
-    mem = state["mem"].at[ids].set(s_new)
-    mem = mem.at[n_dump].set(0.0)
+        s_new = upd_fn(params["upd"], mbar, state["mem"][ids])
+        mem = state["mem"].at[ids].set(s_new).at[n_dump].set(0.0)
+        last = state["last"].at[ids].max(jnp.where(live, ts, 0.0))
+        last = last.at[n_dump].set(0.0)
 
     mem2 = state["mem2"]
     if cfg.flavor == "tige":
         s2_new = rnn(params["upd2"], mbar, state["mem2"][ids])
         mem2 = state["mem2"].at[ids].set(s2_new).at[n_dump].set(0.0)
-
-    last = state["last"].at[ids].max(jnp.where(live, ts, 0.0))
-    last = last.at[n_dump].set(0.0)
 
     b2 = ids.shape[0]
     return {
@@ -326,11 +327,13 @@ def step_loss(
     embeds = {"src": emb_all[:b], "dst": emb_all[b:2 * b],
               "neg": emb_all[2 * b:]}
 
-    # 3) self-supervised link prediction loss (paper §II-C decoder g)
-    pos_logit = mlp(params["dec"], jnp.concatenate(
-        [embeds["src"], embeds["dst"]], axis=-1))[:, 0]
-    neg_logit = mlp(params["dec"], jnp.concatenate(
-        [embeds["src"], embeds["neg"]], axis=-1))[:, 0]
+    # 3) self-supervised link prediction loss (paper §II-C decoder g) —
+    # pos and neg pairs stacked into ONE (2B, 2d) decoder launch
+    dec_in = jnp.concatenate([
+        jnp.concatenate([embeds["src"], embeds["dst"]], axis=-1),
+        jnp.concatenate([embeds["src"], embeds["neg"]], axis=-1)])
+    logits = mlp(params["dec"], dec_in)[:, 0]
+    pos_logit, neg_logit = logits[:b], logits[b:]
     v = valid.astype(jnp.float32)
     nv = jnp.clip(v.sum(), 1.0)
     bce_pos = jax.nn.softplus(-pos_logit)

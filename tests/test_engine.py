@@ -230,3 +230,31 @@ def test_scan_epoch_pallas_interpret_matches_xla():
         outs[name] = (np.asarray(losses), np.asarray(s["mem"]))
     np.testing.assert_allclose(outs["pallas"][0], outs["xla"][0], atol=1e-4)
     np.testing.assert_allclose(outs["pallas"][1], outs["xla"][1], atol=1e-4)
+
+
+def test_eval_program_cache_is_lru():
+    """A hit must move the program to the back of the eviction order, so an
+    alternating workload cycling through > max configs keeps its hot
+    programs compiled (move-to-end-on-hit, evict-front)."""
+    from repro.tig import engine
+
+    saved, saved_max = engine._EVAL_PROGRAMS, engine._EVAL_PROGRAMS_MAX
+    engine._EVAL_PROGRAMS = {}
+    engine._EVAL_PROGRAMS_MAX = 3
+    try:
+        def cfg_for(d):
+            return TIGConfig(flavor="tgn", dim=d, dim_time=8, dim_edge=16,
+                             dim_node=16, num_neighbors=4, batch_size=8)
+
+        f8 = make_eval_epoch(cfg_for(8))
+        make_eval_epoch(cfg_for(16))
+        make_eval_epoch(cfg_for(24))
+        # hit cfg(8): it becomes most-recent, cfg(16) is now the LRU entry
+        assert make_eval_epoch(cfg_for(8)) is f8
+        make_eval_epoch(cfg_for(32))            # evicts cfg(16), not cfg(8)
+        assert make_eval_epoch(cfg_for(8)) is f8
+        keys_dims = [k[0][1] for k in engine._EVAL_PROGRAMS]
+        assert 16 not in keys_dims and 8 in keys_dims
+    finally:
+        engine._EVAL_PROGRAMS = saved
+        engine._EVAL_PROGRAMS_MAX = saved_max

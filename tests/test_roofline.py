@@ -142,3 +142,47 @@ def test_parse_collectives_regex():
     assert st.counts["all-reduce"] == 1
     assert st.bytes_by_kind["all-gather"] == 128 * 256 * 4
     assert st.bytes_by_kind["all-reduce"] == 64 * 2 * 2  # doubled
+
+
+# ------------------------------------------------- kernel HBM byte models
+
+def test_kernel_bytes_fused_bwd_strictly_fewer():
+    """Acceptance: the fused backward kernels move strictly fewer modeled
+    HBM bytes than the oracle-VJP recompute path, across scales."""
+    from repro.roofline.kernel_bytes import attn_bytes, gru_bytes
+    for b in (64, 400, 4096):
+        g_f = gru_bytes(b, 176, 128, direction="bwd", fused=True)
+        g_o = gru_bytes(b, 176, 128, direction="bwd", fused=False)
+        assert g_f.total < g_o.total, (b, g_f.total, g_o.total)
+        a_f = attn_bytes(3 * b, 10, 2, 64, direction="bwd", fused=True)
+        a_o = attn_bytes(3 * b, 10, 2, 64, direction="bwd", fused=False)
+        assert a_f.total < a_o.total, (b, a_f.total, a_o.total)
+        # forward fusion also wins
+        assert gru_bytes(b, 176, 128, fused=True).total < \
+            gru_bytes(b, 176, 128, fused=False).total
+        assert attn_bytes(3 * b, 10, 2, 64, fused=True).total < \
+            attn_bytes(3 * b, 10, 2, 64, fused=False).total
+
+
+def test_flush_bytes_fused_is_o_rows_not_o_nodes():
+    """The fused flush has no O(N) term: its forward bytes are flat in the
+    node count, while the unfused table-based pipeline grows linearly."""
+    from repro.roofline.kernel_bytes import flush_bytes
+    f_small = flush_bytes(10_000, 400, 176, 128, fused=True)
+    f_big = flush_bytes(10_000_000, 400, 176, 128, fused=True)
+    assert f_small.total == f_big.total
+    u_small = flush_bytes(10_000, 400, 176, 128, fused=False)
+    u_big = flush_bytes(10_000_000, 400, 176, 128, fused=False)
+    assert u_big.total > 100 * u_small.total / 2     # ~linear in N
+    assert f_small.total < u_small.total
+
+
+def test_step_pipeline_bytes_fused_wins_and_itemizes():
+    from repro.roofline.kernel_bytes import step_pipeline_bytes
+    out = step_pipeline_bytes(n_nodes=100_000, batch=200, d_msg=176,
+                              d_mem=128, k_neighbors=10, n_heads=2)
+    assert out["fused"] < out["unfused"]
+    assert len(out["detail"]) == 8
+    for p in out["detail"]:
+        assert p.total == p.read_bytes + p.write_bytes
+        assert all(v >= 0 for v in p.reads.values())
