@@ -1,0 +1,129 @@
+"""PAC epoch-plan benchmark: host bytes + H2D traffic, replay vs wrap.
+
+The transfer-minimal plan (PR 5) ships each device's REAL batches only —
+a flat grid gathered on device as ``offset + s % n_batches`` — where the
+legacy plan replayed every grid to the global lockstep length on the host
+(``v[replay]``).  On an imbalanced partition the lockstep length is set by
+the largest device, so the replayed plan pays ``N_dev * steps`` batch rows
+of host memory and host->device transfer while the flat plan pays
+``sum_k real_k``.  This module measures, on a deliberately imbalanced
+4-device split of a synthetic stream:
+
+  * plan wall-time,
+  * peak host bytes during planning (tracemalloc),
+  * batch-grid bytes (the H2D payload that differs between the layouts),
+  * total H2D bytes (grids + per-device feature tables + metadata),
+
+for the host-replay oracle, the device-wrap plan, and the device-wrap plan
+built straight from ``tig-shards-v1`` row ranges (whose grids are asserted
+bit-identical to the in-memory plan).  The >= 2x grid-byte reduction on
+the imbalanced scenario is asserted here (CI runs this module).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import tracemalloc
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+
+
+def _imbalanced_node_lists(g, weights=(0.70, 0.10, 0.10, 0.10), seed=0):
+    """Split users and items across devices with skewed shares — every part
+    keeps both sides of the bipartite stream so it owns internal edges,
+    but one device dwarfs the rest (the Tab.VII imbalance regime)."""
+    rng = np.random.default_rng(seed)
+    nu = int(g.src.max()) + 1                   # users are [0, nu)
+    parts: list[list[np.ndarray]] = [[] for _ in weights]
+    for lo, hi in ((0, nu), (nu, g.num_nodes)):
+        ids = rng.permutation(np.arange(lo, hi))
+        cuts = np.cumsum(np.array(weights) * len(ids)).astype(int)[:-1]
+        for k, piece in enumerate(np.split(ids, cuts)):
+            parts[k].append(piece)
+    return [np.sort(np.concatenate(p)) for p in parts]
+
+
+def _measure_plan(source, node_lists, cfg, *, host_replay, time_scale):
+    """Build one epoch plan and return (plan, row dict of measurements)."""
+    import jax.numpy as jnp
+
+    from repro.tig.distributed import plan_epoch
+
+    shared = np.zeros(0, dtype=np.int64)
+    rng = np.random.default_rng(0)
+    tracemalloc.start()
+    with timer() as t:
+        plan = plan_epoch(source, node_lists, shared, cfg, rng,
+                          time_scale=time_scale, host_replay=host_replay)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    # what pac_train's to_device actually ships
+    offsets = plan.offsets if plan.offsets is not None else \
+        np.zeros(len(node_lists), np.int32)
+    h2d = [jnp.asarray(v) for v in plan.batches.values()]
+    h2d += [jnp.asarray(offsets), jnp.asarray(plan.n_batches),
+            jnp.asarray(plan.nfeat_local), jnp.asarray(plan.efeat_local),
+            jnp.asarray(plan.shared_local)]
+    h2d_bytes = int(sum(int(x.nbytes) for x in h2d))
+    return plan, {
+        "plan_s": t.s,
+        "peak_host_mb": peak / 1e6,
+        "grid_mb": plan.grid_bytes() / 1e6,
+        "h2d_mb": h2d_bytes / 1e6,
+        "steps": plan.steps,
+        "real_batches": int(plan.n_batches.sum()),
+    }
+
+
+def run(fast: bool = True):
+    from repro.tig.data import synthetic_tig
+    from repro.tig.models import TIGConfig
+    from repro.tig.stream import write_graph_shards
+    from repro.tig.train import time_scale_of
+
+    name = "wikipedia-s" if fast else "ml25m-s"
+    g = synthetic_tig(name, seed=0)
+    cfg = TIGConfig(flavor="tgn", dim=32, dim_time=16, dim_edge=g.dim_edge,
+                    dim_node=g.dim_node, num_neighbors=5, batch_size=100)
+    node_lists = _imbalanced_node_lists(g)
+    scale = time_scale_of(g.t)
+
+    rows = []
+    plan_old, m_old = _measure_plan(g, node_lists, cfg,
+                                    host_replay=True, time_scale=scale)
+    rows.append({"plan": "host_replay (oracle)", "dataset": name, **m_old})
+    plan_new, m_new = _measure_plan(g, node_lists, cfg,
+                                    host_replay=False, time_scale=scale)
+    rows.append({"plan": "device_wrap (flat)", "dataset": name, **m_new})
+
+    with tempfile.TemporaryDirectory(prefix="pac_plan_") as td:
+        sh = write_graph_shards(g, td, shard_edges=4096)
+        plan_shd, m_shd = _measure_plan(sh, node_lists, cfg,
+                                        host_replay=False, time_scale=scale)
+        rows.append({"plan": "device_wrap (sharded)", "dataset": name,
+                     **m_shd})
+        # the out-of-core localization must emit the exact same plan
+        for key in plan_new.batches:
+            np.testing.assert_array_equal(plan_shd.batches[key],
+                                          plan_new.batches[key])
+        np.testing.assert_array_equal(plan_shd.offsets, plan_new.offsets)
+
+    grid_ratio = m_old["grid_mb"] / m_new["grid_mb"]
+    h2d_ratio = m_old["h2d_mb"] / m_new["h2d_mb"]
+    for r in rows:
+        r["grid_reduction_vs_replay"] = m_old["grid_mb"] / r["grid_mb"]
+    print(f"batch-grid H2D reduction: {grid_ratio:.2f}x "
+          f"(total H2D incl. feature tables: {h2d_ratio:.2f}x)")
+    assert grid_ratio >= 2.0, (
+        f"imbalanced scenario must cut batch-grid H2D bytes >= 2x, "
+        f"got {grid_ratio:.2f}x")
+
+    emit("pac_plan", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,7 @@ MODULES = [
     "engine_speedup",
     "kernel_backward",
     "ingest_prefetch",
+    "pac_plan",
     "protocol_sharded",
     "table3_efficiency",
     "table4_linkpred",

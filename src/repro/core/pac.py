@@ -35,6 +35,8 @@ from repro.core.sep import PartitionResult
 
 __all__ = [
     "shuffle_combine",
+    "member_mask",
+    "subgraph_mask",
     "build_subgraph",
     "LocalIndex",
     "make_local_indices",
@@ -70,6 +72,24 @@ def shuffle_combine(
     return combined
 
 
+def member_mask(nodes: np.ndarray, num_nodes: int) -> np.ndarray:
+    """(num_nodes,) bool membership table for one device's node set."""
+    member = np.zeros(num_nodes, dtype=bool)
+    member[nodes] = True
+    return member
+
+
+def subgraph_mask(
+    member: np.ndarray, src: np.ndarray, dst: np.ndarray
+) -> np.ndarray:
+    """Per-edge mask: BOTH endpoints inside ``member`` (E_k of §II-C).
+
+    Takes a prebuilt membership table so chunked callers (out-of-core
+    localization over ``ShardedStream.edge_chunks``) pay the O(N) mask
+    build once per device, not once per chunk."""
+    return member[src] & member[dst]
+
+
 def build_subgraph(
     src: np.ndarray,
     dst: np.ndarray,
@@ -77,9 +97,7 @@ def build_subgraph(
     num_nodes: int,
 ) -> np.ndarray:
     """Indices of edges with BOTH endpoints inside ``nodes`` (E_k of §II-C)."""
-    member = np.zeros(num_nodes, dtype=bool)
-    member[nodes] = True
-    keep = member[src] & member[dst]
+    keep = subgraph_mask(member_mask(nodes, num_nodes), src, dst)
     return np.nonzero(keep)[0]
 
 

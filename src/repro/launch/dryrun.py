@@ -293,6 +293,11 @@ def dryrun_speed_tig(*, multi_pod: bool, save: bool = True,
     e_cap = n_edges // n_parts + n_parts  # balanced partitions (SEP)
 
     def batch_tree():
+        # host_replay layout: per-chip (steps, ...) grids sharded over the
+        # mesh.  With balanced SEP partitions the transfer-minimal flat
+        # grid would be the same rows REPLICATED on every chip (it is
+        # unsharded until the ROADMAP row-range sharding lands), so the
+        # sharded replay placement is what a pod actually wants here.
         per = {
             "src": sds((n_parts, steps, b), i32),
             "dst": sds((n_parts, steps, b), i32),
@@ -313,11 +318,13 @@ def dryrun_speed_tig(*, multi_pod: bool, save: bool = True,
     opt_shape = jax.eval_shape(opt.init, params_shape)
     n_shared = int(0.01 * 4_889_537)   # top_k=1% hubs shared
 
-    epoch_fn = make_pac_epoch(cfg, opt, steps, capacity, mesh=mesh)
+    epoch_fn = make_pac_epoch(cfg, opt, steps, capacity, mesh=mesh,
+                              host_replay=True)
     t0 = time.time()
     lowered = epoch_fn.lower(
         params_shape, opt_shape, batch_tree(),
-        sds((n_parts,), i32),
+        sds((n_parts,), i32),            # per-device flat-grid offsets
+        sds((n_parts,), i32),            # per-device real batch counts
         sds((n_parts, capacity + 1, cfg.dim_node), f32),
         sds((n_parts, e_cap + 1, cfg.dim_edge), f32),
         sds((n_parts, n_shared), i32),

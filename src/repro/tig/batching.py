@@ -28,7 +28,8 @@ from repro.tig.models import TIGConfig
 from repro.tig.sampler import ChronoNeighborIndex, NeighborSnapshot
 
 __all__ = ["LocalStream", "build_batch_program", "build_batches",
-           "stack_batches", "unstack_batches", "make_tables"]
+           "concat_batch_programs", "stack_batches", "unstack_batches",
+           "make_tables"]
 
 
 @dataclasses.dataclass
@@ -141,6 +142,26 @@ def build_batch_program(
         batches[f"nbre_{role}"] = ne.astype(np.int32)
 
     return batches, index.final_snapshot()
+
+
+def concat_batch_programs(
+    programs: list[dict],
+) -> tuple[dict, np.ndarray]:
+    """Concatenate per-device (steps_k, ...) batch pytrees into ONE flat
+    grid plus per-device row offsets — the transfer-minimal PAC layout.
+
+    Each device later reads its rows ``offset[k] + s % steps_k`` on device
+    (engine ``wrap_steps`` gather), so the flat grid carries only real
+    batches: ``sum_k steps_k`` rows instead of ``N_dev * lockstep_steps``.
+
+    Returns ``(flat, offsets)`` with ``offsets`` int32 (N_dev,).
+    """
+    lengths = np.array([len(p["src"]) for p in programs], dtype=np.int64)
+    offsets = np.concatenate(
+        [[0], np.cumsum(lengths)[:-1]]).astype(np.int32)
+    flat = {k: np.concatenate([p[k] for p in programs])
+            for k in programs[0]}
+    return flat, offsets
 
 
 def build_batches(

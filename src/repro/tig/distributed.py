@@ -27,13 +27,28 @@ The SAME function runs under two executors:
 
 Host-side epoch planning (partition -> super-partitions -> localized padded
 streams) lives here too, built on ``repro.core.pac``.
+
+§Perf C3 — transfer-minimal batch plane.  The Alg.2 wrap-around (step 2
+above) runs ON DEVICE: ``plan_epoch`` emits each device's *real* batch grid
+only, concatenated into one flat pytree plus per-device row offsets, and
+the scanned epoch gathers batch ``offset + s % n_batches`` with
+``lax.dynamic_index_in_dim``.  The previous host-side scheme — replaying
+every grid to the global lockstep length with ``v[replay]`` — shipped
+``N_dev * steps_per_epoch`` batch rows per epoch; the flat plan ships
+``sum_k real_batches_k``, an ``N*steps/sum(real)``-fold reduction in host
+grid bytes and host->device traffic that grows with partition imbalance.
+The replay layout is kept as the bit-exact parity oracle
+(``host_replay=True``).  ``plan_epoch`` also localizes directly from
+``ShardedStream`` row-range chunks (one shard of ids+features in host
+memory at a time), so ``pac_train`` runs end-to-end without a materialized
+``TemporalGraph``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Literal, Optional
+from typing import Literal, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,19 +62,27 @@ from repro.core.pac import (
     cycle_schedule,
     make_local_indices,
     shuffle_combine,
+    subgraph_mask,
 )
 from repro.core.sep import PartitionResult
 from repro.optim import Optimizer
-from repro.tig.batching import LocalStream, build_batch_program
+from repro.tig.batching import (
+    LocalStream,
+    build_batch_program,
+    concat_batch_programs,
+)
 from repro.tig.engine import scan_train_epoch
 from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state
 from repro.tig.protocol import time_scale_of
-from repro.tig.stream import EpochPrefetcher
+from repro.tig.sampler import ChronoNeighborIndex
+from repro.tig.stream import EpochPrefetcher, ShardedStream
 from repro.tig.train import epoch_rng
 
 __all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "pac_train",
-           "PACResult"]
+           "PACResult", "globalize_memory"]
+
+StreamSource = Union[TemporalGraph, ShardedStream]
 
 
 # ======================================================================
@@ -68,9 +91,19 @@ __all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "pac_train",
 
 @dataclasses.dataclass
 class EpochPlan:
-    """Everything one epoch of PAC needs, stacked over the device axis."""
+    """Everything one epoch of PAC needs.
 
-    batches: dict                 # pytree of (N_dev, steps, ...) arrays
+    Default (transfer-minimal) layout: ``batches`` is a FLAT pytree of
+    (sum_k n_batches_k, ...) arrays — each device's real batch grid only,
+    concatenated — and ``offsets`` holds each device's start row; the
+    device epoch gathers batch ``offsets[k] + s % n_batches[k]`` on device
+    (Alg.2 wrap-around without host replay).  With ``host_replay=True``
+    (the parity oracle) ``batches`` is the legacy (N_dev, steps, ...)
+    stack, replayed to the lockstep length on the host, and ``offsets`` is
+    ``None``.
+    """
+
+    batches: dict                 # flat (sum real, ...) or (N_dev, steps, ...)
     n_batches: np.ndarray         # (N_dev,) real batches per device
     nfeat_local: np.ndarray       # (N_dev, cap+1, d_n)
     efeat_local: np.ndarray       # (N_dev, e_cap+1, d_e) — per-device edge
@@ -82,26 +115,26 @@ class EpochPlan:
     edge_capacity: int            # padded local edge count
     steps: int
     edges_per_device: np.ndarray  # (N_dev,)
+    offsets: Optional[np.ndarray] = None   # (N_dev,) flat-grid start rows
+    host_replay: bool = False
+
+    def grid_bytes(self) -> int:
+        """Host bytes of the batch grids (what the epoch must transfer)."""
+        return int(sum(np.asarray(v).nbytes for v in self.batches.values()))
 
 
-def plan_epoch(
+def _localize_in_memory(
     g: TemporalGraph,
     node_lists: list[np.ndarray],
-    shared_nodes: np.ndarray,
-    cfg: TIGConfig,
-    rng: np.random.Generator,
-    *,
-    steps_override: Optional[int] = None,
-    time_scale: Optional[float] = None,
-) -> EpochPlan:
-    """Localize each device's sub-graph and pre-build its padded batch
-    stream (with wrap-around replay up to steps_per_epoch)."""
+    local,
+    cap: int,
+    time_scale: float,
+):
+    """Per-device localized streams + feature gathers from a materialized
+    ``TemporalGraph`` (the original in-memory path)."""
     n_dev = len(node_lists)
-    time_scale = time_scale or time_scale_of(g.t)
-    local = make_local_indices(node_lists, g.num_nodes)
-    cap = local[0].capacity if local else 0
-
     streams: list[LocalStream] = []
+    indexes: list[Optional[ChronoNeighborIndex]] = []
     edges_per_device = np.zeros(n_dev, dtype=np.int64)
     edge_globals: list[np.ndarray] = []
     for k, (nodes, li) in enumerate(zip(node_lists, local)):
@@ -120,24 +153,7 @@ def plan_epoch(
                 labels=None if g.labels is None else g.labels[eidx],
             )
         )
-
-    sched = cycle_schedule(edges_per_device, cfg.batch_size)
-    steps = steps_override or sched.steps_per_epoch
-
-    per_dev_stacked = []
-    for k, stream in enumerate(streams):
-        real, _ = build_batch_program(stream, cfg, rng)
-        # Alg.2 wrap-around: replay from the start; the neighbor index is
-        # implicitly reset each cycle because replayed batches reuse the
-        # first-cycle samples.
-        replay = np.arange(steps) % len(real["src"])
-        per_dev_stacked.append({k: v[replay] for k, v in real.items()})
-    batches = {
-        k: np.stack([d[k] for d in per_dev_stacked])
-        for k in per_dev_stacked[0]
-    }
-    # labels are host-side only (classification head is trained post-hoc)
-    batches.pop("labels", None)
+        indexes.append(None)   # build_batch_program's one-shot build
 
     nfeat_local = np.zeros((n_dev, cap + 1, g.dim_node), np.float32)
     for k, li in enumerate(local):
@@ -148,6 +164,164 @@ def plan_epoch(
     efeat_local = np.zeros((n_dev, e_cap + 1, g.dim_edge), np.float32)
     for k, eg in enumerate(edge_globals):
         efeat_local[k, : len(eg)] = g.edge_feat[eg]
+    return streams, indexes, edges_per_device, nfeat_local, efeat_local
+
+
+def _localize_sharded(
+    shards: ShardedStream,
+    node_lists: list[np.ndarray],
+    local,
+    cap: int,
+    cfg: TIGConfig,
+    time_scale: float,
+):
+    """Per-device localized streams + feature gathers straight from
+    ``tig-shards-v1`` row-range chunks — the graph is never materialized.
+
+    One chunked pass over ``edge_chunks(features=True)`` classifies each
+    shard's edges against every device's membership (vectorized
+    ``subgraph_mask``), localizes ids, and gathers that shard's feature
+    rows; host memory holds one shard of ids+features plus the per-device
+    localized streams (O(E_k) ids + O(E_k) feature rows — the working set
+    the device needs anyway, never the global table).  The per-device
+    temporal neighbor index is built with the chunked two-pass T-CSR
+    (``ChronoNeighborIndex.from_chunks``) over the same localized pieces —
+    arrays identical to the one-shot build on the concatenated stream.
+    """
+    n_dev = len(node_lists)
+    members = [li.to_local >= 0 for li in local]
+    pieces: list[list[tuple]] = [[] for _ in range(n_dev)]
+    feat_parts: list[list[np.ndarray]] = [[] for _ in range(n_dev)]
+    cursors = np.zeros(n_dev, dtype=np.int64)
+
+    for src, dst, t, _eidx, efeat in shards.edge_chunks(features=True):
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        for k, li in enumerate(local):
+            keep = subgraph_mask(members[k], src, dst)
+            m = int(keep.sum())
+            if m == 0:
+                continue
+            # LOCAL edge ids into the device's own feature table: rows are
+            # appended in stream order, so ids are the running cursor
+            eidx_local = np.arange(cursors[k], cursors[k] + m,
+                                   dtype=np.int64)
+            cursors[k] += m
+            pieces[k].append((
+                li.to_local[src[keep]].astype(np.int64),
+                li.to_local[dst[keep]].astype(np.int64),
+                np.asarray(t, np.float64)[keep] / time_scale,
+                eidx_local,
+            ))
+            feat_parts[k].append(efeat[keep])
+
+    streams: list[LocalStream] = []
+    indexes: list[Optional[ChronoNeighborIndex]] = []
+    edges_per_device = cursors.copy()
+    e_cap = int(edges_per_device.max()) if n_dev else 0
+    efeat_local = np.zeros((n_dev, e_cap + 1, shards.dim_edge), np.float32)
+    for k in range(n_dev):
+        chunks = pieces[k]
+        cat = lambda i: (  # noqa: E731
+            np.concatenate([c[i] for c in chunks]) if chunks
+            else np.zeros(0, np.int64 if i != 2 else np.float64))
+        streams.append(
+            LocalStream(
+                src=cat(0), dst=cat(1), t=cat(2), eidx=cat(3),
+                num_local_nodes=cap, labels=None,
+            )
+        )
+        # an edge-less device degenerates to one padding batch whose index
+        # the one-shot build handles (from_chunks would report 0 batches)
+        indexes.append(ChronoNeighborIndex.from_chunks(
+            chunks, cap, cfg.num_neighbors, cfg.batch_size)
+            if chunks else None)
+        if feat_parts[k]:
+            efeat_local[k, : edges_per_device[k]] = \
+                np.concatenate(feat_parts[k])
+        # release this device's chunk pieces eagerly: the concatenated
+        # stream + T-CSR index own fresh arrays, keeping the originals
+        # alive would double the id-column working set
+        feat_parts[k] = []
+        pieces[k] = []
+
+    nfeat_local = np.zeros((n_dev, cap + 1, shards.dim_node), np.float32)
+    nfeat = shards.node_feat()          # memory-mapped (or zeros)
+    for k, li in enumerate(local):
+        real_ids = li.globals_[: li.num_real]
+        nfeat_local[k, : li.num_real] = np.asarray(nfeat[real_ids],
+                                                   np.float32)
+    return streams, indexes, edges_per_device, nfeat_local, efeat_local
+
+
+def plan_epoch(
+    source: StreamSource,
+    node_lists: list[np.ndarray],
+    shared_nodes: np.ndarray,
+    cfg: TIGConfig,
+    rng: np.random.Generator,
+    *,
+    steps_override: Optional[int] = None,
+    time_scale: Optional[float] = None,
+    host_replay: bool = False,
+) -> EpochPlan:
+    """Localize each device's sub-graph and pre-build its batch stream.
+
+    ``source`` is an in-memory ``TemporalGraph`` or an out-of-core
+    ``ShardedStream`` (row-range localization, the graph never
+    materializes).  By default the plan is transfer-minimal: only real
+    batches are emitted (flat grid + per-device offsets; Alg.2 wrap-around
+    happens on device).  ``host_replay=True`` reproduces the legacy
+    host-side replay up to ``steps_per_epoch`` — kept as the bit-exact
+    parity oracle.
+    """
+    n_dev = len(node_lists)
+    local = make_local_indices(node_lists, source.num_nodes)
+    cap = local[0].capacity if local else 0
+
+    if isinstance(source, ShardedStream):
+        if time_scale is None:
+            # one 8-byte/edge column pass — the same cost every consumer
+            # of a sharded stream already pays (protocol.split_views)
+            time_scale = time_scale_of(source.column("t"))
+        streams, indexes, edges_per_device, nfeat_local, efeat_local = \
+            _localize_sharded(source, node_lists, local, cap, cfg,
+                              time_scale)
+    else:
+        time_scale = time_scale or time_scale_of(source.t)
+        streams, indexes, edges_per_device, nfeat_local, efeat_local = \
+            _localize_in_memory(source, node_lists, local, cap, time_scale)
+
+    sched = cycle_schedule(edges_per_device, cfg.batch_size)
+    steps = steps_override or sched.steps_per_epoch
+
+    programs = []
+    for k, stream in enumerate(streams):
+        real, _ = build_batch_program(stream, cfg, rng, index=indexes[k])
+        # labels are host-side only (classification head trained post-hoc)
+        real.pop("labels", None)
+        programs.append(real)
+
+    real_batches = np.array([len(p["src"]) for p in programs],
+                            dtype=np.int64)
+    n_batches = np.minimum(real_batches, steps).astype(np.int32)
+
+    if host_replay:
+        # legacy Alg.2 wrap-around ON HOST: replay from the start; the
+        # neighbor index is implicitly reset each cycle because replayed
+        # batches reuse the first-cycle samples.
+        per_dev = [{kk: v[np.arange(steps) % len(p["src"])]
+                    for kk, v in p.items()} for p in programs]
+        batches = {kk: np.stack([d[kk] for d in per_dev])
+                   for kk in per_dev[0]}
+        offsets = None
+    else:
+        # transfer-minimal: ship ONLY the real batches (trimmed to the
+        # lockstep length when steps_override cuts an epoch short); the
+        # device gathers offsets[k] + s % n_batches[k] inside the scan.
+        trimmed = [{kk: v[: n_batches[k]] for kk, v in p.items()}
+                   for k, p in enumerate(programs)]
+        batches, offsets = concat_batch_programs(trimmed)
 
     shared_local = np.zeros((n_dev, len(shared_nodes)), np.int32)
     for k, li in enumerate(local):
@@ -159,10 +333,10 @@ def plan_epoch(
                 "(Alg.1 line 20 shared_to_all)")
         shared_local[k] = rows
 
-    real_batches = np.maximum(1, -(-edges_per_device // cfg.batch_size))
+    e_cap = int(edges_per_device.max()) if n_dev else 0
     return EpochPlan(
         batches=batches,
-        n_batches=np.minimum(real_batches, steps).astype(np.int32),
+        n_batches=n_batches,
         nfeat_local=nfeat_local,
         efeat_local=efeat_local,
         shared_local=shared_local,
@@ -171,6 +345,8 @@ def plan_epoch(
         edge_capacity=e_cap,
         steps=steps,
         edges_per_device=edges_per_device,
+        offsets=offsets,
+        host_replay=host_replay,
     )
 
 
@@ -181,7 +357,8 @@ def plan_epoch(
 def device_epoch(
     params,
     opt_state,
-    batches,        # pytree of (steps, ...) — this device's stream
+    batches,        # flat (sum real, ...) pytree — or (steps, ...) replayed
+    offset,         # () int32 — this device's start row in the flat grid
     n_batches,      # () int32 — real batches (cycle length)
     nfeat_local,    # (cap+1, d_n)
     efeat,          # (E+1, d_e) replicated
@@ -193,6 +370,7 @@ def device_epoch(
     capacity: int,
     sync_mode: Literal["latest", "mean"] = "latest",
     axis: str = "part",
+    host_replay: bool = False,
 ):
     """One epoch on one device (runs under vmap or shard_map over ``axis``).
 
@@ -200,14 +378,26 @@ def device_epoch(
     with ``cycle_length`` = this device's real batch count and DDP gradient
     sync over ``axis``); the PAC-specific shared-node memory sync runs as
     the epilogue below.
+
+    Default mode is the transfer-minimal plan: ``batches`` holds only real
+    batches and the scan gathers ``offset + s % n_batches`` for each of the
+    ``steps`` lockstep steps (Alg.2 wrap-around ON DEVICE).  With
+    ``host_replay`` (the parity oracle) ``batches`` is this device's grid
+    already replayed to ``steps`` rows on the host.
     """
-    del steps  # stream length is carried by the batches pytree itself
     tables = {"efeat": efeat, "nfeat": nfeat_local}
     fresh = init_state(cfg, capacity)
 
-    params, opt_state, state, losses = scan_train_epoch(
-        params, opt_state, fresh, batches, tables,
-        cfg=cfg, opt=opt, axis=axis, cycle_length=n_batches)
+    if host_replay:
+        # stream length is carried by the batches pytree itself
+        params, opt_state, state, losses = scan_train_epoch(
+            params, opt_state, fresh, batches, tables,
+            cfg=cfg, opt=opt, axis=axis, cycle_length=n_batches)
+    else:
+        params, opt_state, state, losses = scan_train_epoch(
+            params, opt_state, fresh, batches, tables,
+            cfg=cfg, opt=opt, axis=axis, cycle_length=n_batches,
+            wrap_steps=steps, wrap_offset=offset)
 
     # shared-node memory synchronization (paper §II-C).
     # §Perf iteration C1: instead of all-gathering the full (N_dev, S, d)
@@ -249,6 +439,7 @@ def make_pac_epoch(
     *,
     mesh: Optional[Mesh] = None,
     sync_mode: Literal["latest", "mean"] = "latest",
+    host_replay: bool = False,
 ):
     """Build the jitted epoch executor.
 
@@ -256,26 +447,35 @@ def make_pac_epoch(
                   device; used by CPU tests/benchmarks).
     mesh given -> shard_map over mesh axis "part" (real SPMD; the dry-run
                   compiles this exact program for the production mesh).
+
+    In the default transfer-minimal mode the flat batch grid is UNMAPPED
+    (vmap ``in_axes=None`` / shard_map replicated): every device holds the
+    ``sum_k n_batches_k`` real rows and gathers its own window — still far
+    smaller than a replayed ``N_dev * steps`` grid whenever partitions are
+    imbalanced.  (Sharding the flat grid by row ranges across hosts is the
+    multi-host item on the ROADMAP.)  With ``host_replay`` the legacy
+    per-device replayed grids are mapped over the device axis.
     """
     kernel = functools.partial(
         device_epoch, cfg=cfg, opt=opt, steps=steps, capacity=capacity,
-        sync_mode=sync_mode,
+        sync_mode=sync_mode, host_replay=host_replay,
     )
 
     if mesh is None:
         vmapped = jax.vmap(
             kernel,
-            in_axes=(None, None, 0, 0, 0, 0, 0),
+            in_axes=(None, None, 0 if host_replay else None,
+                     0, 0, 0, 0, 0),
             out_axes=(0, 0, 0, 0),
             axis_name="part",
         )
 
         @jax.jit
-        def run(params, opt_state, batches, n_batches, nfeat_local, efeat,
-                shared_local):
+        def run(params, opt_state, batches, offsets, n_batches,
+                nfeat_local, efeat, shared_local):
             p, o, state, losses = vmapped(
-                params, opt_state, batches, n_batches, nfeat_local, efeat,
-                shared_local)
+                params, opt_state, batches, offsets, n_batches,
+                nfeat_local, efeat, shared_local)
             # params/opt_state identical across devices (pmean'd grads)
             p0 = jax.tree.map(lambda x: x[0], p)
             o0 = jax.tree.map(lambda x: x[0], o)
@@ -286,11 +486,13 @@ def make_pac_epoch(
     part = P("part")
     rep = P()
 
-    def body(params, opt_state, batches, n_batches, nfeat_local, efeat,
-             shared_local):
+    def body(params, opt_state, batches, offsets, n_batches, nfeat_local,
+             efeat, shared_local):
         squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
         p, o, state, losses = kernel(
-            params, opt_state, squeeze(batches), squeeze(n_batches),
+            params, opt_state,
+            squeeze(batches) if host_replay else batches,
+            squeeze(offsets), squeeze(n_batches),
             squeeze(nfeat_local), squeeze(efeat), squeeze(shared_local))
         expand = lambda t: jax.tree.map(lambda x: x[None], t)
         return p, o, expand(state), expand(losses)
@@ -298,7 +500,8 @@ def make_pac_epoch(
     smapped = compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(rep, rep, part, part, part, part, part),
+        in_specs=(rep, rep, part if host_replay else rep,
+                  part, part, part, part, part),
         out_specs=(rep, rep, part, part),
     )
     return jax.jit(smapped)
@@ -307,6 +510,46 @@ def make_pac_epoch(
 # ======================================================================
 # full training driver
 # ======================================================================
+
+def globalize_memory(
+    states,
+    plan: EpochPlan,
+    num_nodes: int,
+    cfg: TIGConfig,
+    *,
+    time_rescale: float = 1.0,
+) -> dict:
+    """Merge PAC's stacked (N_dev, ...) post-sync memories into one
+    global-row state suitable for the evaluation protocol.
+
+    Each device contributes its real local rows (local id = rank in the
+    sorted node list, as ``make_local_indices`` assigns them); a node
+    hosted by several devices resolves by the paper's "latest" rule — the
+    replica with the largest last-update time wins (first host wins ties).
+    ``time_rescale`` converts the plan-scale "last" timestamps into the
+    consumer's units (train-split scale -> protocol full-stream scale).
+    Pending-message buffers are not carried over: PAC's cycle-end backup
+    already treats (mem, mem2, last) as the state of record.
+    """
+    d = int(np.asarray(states["mem"]).shape[-1])
+    mem = np.zeros((num_nodes + 1, d), np.float32)
+    mem2 = np.zeros((num_nodes + 1, d), np.float32)
+    last = np.zeros((num_nodes + 1,), np.float32)
+    written = np.zeros(num_nodes + 1, dtype=bool)
+    for k, nodes in enumerate(plan.node_lists):
+        nodes = np.sort(np.asarray(nodes, np.int64))
+        n = len(nodes)
+        m = np.asarray(states["mem"][k][:n])
+        m2 = np.asarray(states["mem2"][k][:n])
+        l = np.asarray(states["last"][k][:n]) * np.float32(time_rescale)
+        take = (~written[nodes]) | (l > last[nodes])
+        tgt = nodes[take]
+        mem[tgt], mem2[tgt], last[tgt] = m[take], m2[take], l[take]
+        written[tgt] = True
+    fresh = init_state(cfg, num_nodes)
+    return {**fresh, "mem": jnp.asarray(mem), "mem2": jnp.asarray(mem2),
+            "last": jnp.asarray(last)}
+
 
 @dataclasses.dataclass
 class PACResult:
@@ -322,8 +565,11 @@ class PACResult:
         return np.array([float(l.mean()) for l in self.losses])
 
 
+_PAC_PROGRAMS_MAX = 8    # per-call LRU of compiled epoch executors
+
+
 def pac_train(
-    g_train: TemporalGraph,
+    g_train: StreamSource,
     partition: PartitionResult,
     cfg: TIGConfig,
     *,
@@ -335,10 +581,15 @@ def pac_train(
     sync_mode: Literal["latest", "mean"] = "latest",
     mesh: Optional[Mesh] = None,
     prefetch: bool = True,
-    eval_graph: Optional[TemporalGraph] = None,
+    host_replay: bool = False,
+    eval_graph: Optional[StreamSource] = None,
     eval_node_class: bool = False,
 ) -> PACResult:
     """Train a TIG model with SEP partitions + PAC (the paper's pipeline).
+
+    ``g_train`` is the train split — an in-memory ``TemporalGraph`` or an
+    out-of-core ``ShardedStream`` (per-device localization then runs
+    straight off the row-range shards; the graph never materializes).
 
     ``partition`` may have more parts than devices (|P| > N): parts are then
     shuffle-combined into N super-partitions before every epoch (Fig.7).
@@ -346,18 +597,32 @@ def pac_train(
     With ``prefetch`` (the default) cycle e+1's host planning — shuffle-
     combine, localization, batch grids — and its host->device transfer run
     on a worker thread while cycle e's scan executes; per-epoch RNG streams
-    keep results bit-identical to serial planning.
+    keep results bit-identical to serial planning.  ``host_replay=True``
+    selects the legacy host-side wrap-around replay plan (the parity
+    oracle for the transfer-minimal device-side wrap, bit-identical).
+    Note: on a real ``mesh`` the flat grid is currently replicated across
+    devices (see ``make_pac_epoch``), so for near-balanced partitions on
+    memory-tight chips ``host_replay=True``'s device-sharded grids may be
+    the better placement until row-range grid sharding lands (ROADMAP).
 
-    ``eval_graph`` (the FULL chronological stream, of which ``g_train`` is
-    the train split) routes the trained parameters through the shared
-    evaluation-protocol driver (``protocol.run_protocol`` — the same code
-    path as ``train_single`` / ``train_sharded(protocol=True)``) and
-    attaches the resulting val/test metrics to ``PACResult.metrics``.
+    ``eval_graph`` (the FULL chronological stream — ``TemporalGraph`` or
+    ``ShardedStream`` — of which ``g_train`` is the train split) routes the
+    trained parameters through the shared evaluation-protocol driver
+    (``protocol.run_protocol``, the same code path as ``train_single`` /
+    ``train_sharded(protocol=True)``), REUSING PAC's synchronized node
+    memories: the per-device post-sync states are merged back to global
+    rows (latest-timestamp rule, ``globalize_memory``) and val/test are
+    scored from that warm state — the device replay of the train split is
+    skipped, so ``metrics["train_ap"]`` is NaN.  Results attach to
+    ``PACResult.metrics``.
     """
     from repro.optim import adamw
 
     small_parts = partition.node_lists()
-    time_scale = time_scale_of(g_train.t)
+    if isinstance(g_train, ShardedStream):
+        time_scale = time_scale_of(g_train.column("t"))
+    else:
+        time_scale = time_scale_of(g_train.t)
 
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt = adamw(lr=lr, max_grad_norm=1.0)
@@ -373,44 +638,82 @@ def pac_train(
             node_lists = shuffle_combine(
                 small_parts, num_devices, np.random.default_rng(seed))
         return plan_epoch(g_train, node_lists, partition.shared_nodes,
-                          cfg, rng_ep, time_scale=time_scale)
+                          cfg, rng_ep, time_scale=time_scale,
+                          host_replay=host_replay)
 
     def to_device(plan: EpochPlan):
+        offsets = plan.offsets if plan.offsets is not None else \
+            np.zeros(num_devices, np.int32)
         return plan, (
             {k: jnp.asarray(v) for k, v in plan.batches.items()},
+            jnp.asarray(offsets),
             jnp.asarray(plan.n_batches),
             jnp.asarray(plan.nfeat_local),
             jnp.asarray(plan.efeat_local),
             jnp.asarray(plan.shared_local),
         )
 
+    # LRU of compiled epoch executors, mirroring make_eval_epoch's cache:
+    # shuffle-combine draws alternate between a few (steps, capacity,
+    # edge_capacity) shapes across epochs — keep each compiled program
+    # live (move-to-end on hit) instead of rebuilding the jit wrapper
+    # (and its compilation cache) every time the key changes.
+    programs: dict = {}
+
+    def epoch_program(plan: EpochPlan):
+        key = (plan.steps, plan.capacity, plan.edge_capacity)
+        fn = programs.pop(key, None)
+        if fn is None:
+            while len(programs) >= _PAC_PROGRAMS_MAX:
+                programs.pop(next(iter(programs)))
+            fn = make_pac_epoch(
+                cfg, opt, plan.steps, plan.capacity, mesh=mesh,
+                sync_mode=sync_mode, host_replay=host_replay)
+        programs[key] = fn
+        return fn
+
     pf = EpochPrefetcher(build, epochs, to_device=to_device,
                          enabled=prefetch)
     all_losses = []
-    epoch_fn = None
     last_plan = None
-    compiled_key = None
+    states = None
     for ep in range(epochs):
         plan, dev = pf.get(ep)
-        key = (plan.steps, plan.capacity, plan.edge_capacity)
-        if epoch_fn is None or key != compiled_key:
-            epoch_fn = make_pac_epoch(
-                cfg, opt, plan.steps, plan.capacity, mesh=mesh,
-                sync_mode=sync_mode)
-            compiled_key = key
-        params, opt_state, states, losses = epoch_fn(
+        params, opt_state, states, losses = epoch_program(plan)(
             params, opt_state, *dev)
         all_losses.append(np.asarray(losses))
         last_plan = plan
+
+    if last_plan is None:
+        # epochs=0: nothing trained — still emit a consistent result
+        # (plan of the epoch that WOULD have run, fresh stacked memories)
+        last_plan = build(0)
+        fresh = init_state(cfg, last_plan.capacity)
+        states = jax.tree.map(
+            lambda x: np.broadcast_to(
+                np.asarray(x), (num_devices,) + x.shape).copy(), fresh)
 
     from repro.core.pac import derived_speedup as dsp
 
     metrics = None
     if eval_graph is not None:
-        from repro.tig.train import evaluate_params
+        from repro.tig.batching import make_tables
+        from repro.tig.protocol import run_protocol, split_views
+        from repro.tig.stream import stage_device_tables
 
-        metrics = evaluate_params(eval_graph, cfg, params, seed=seed,
-                                  eval_node_class=eval_node_class)
+        splits = split_views(eval_graph)
+        if isinstance(eval_graph, ShardedStream):
+            tables_j = stage_device_tables(eval_graph)
+        else:
+            tables_j = {k: jnp.asarray(v) for k, v in make_tables(
+                eval_graph.edge_feat, eval_graph.node_feat).items()}
+        warm = globalize_memory(
+            jax.tree.map(np.asarray, states), last_plan, splits.num_nodes,
+            cfg, time_rescale=time_scale / splits.time_scale)
+        metrics = run_protocol(
+            params, cfg, splits, tables_j, seed=seed,
+            eval_node_class=eval_node_class, state=warm,
+            replay_train=False)
 
     return PACResult(
         params=params,

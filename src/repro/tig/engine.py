@@ -19,7 +19,14 @@ update in place.
                         array for the paper's Alg.2 loop-within-epoch
                         semantics (reset node memory at each data-cycle
                         start, back it up at each cycle end, restore the
-                        last complete backup at epoch end).
+                        last complete backup at epoch end);
+  * ``wrap_steps``    — transfer-minimal Alg.2 wrap-around ON DEVICE: the
+                        host ships only the ``cycle_length`` *real* batches
+                        (at ``wrap_offset`` in a flat shared grid) and the
+                        scan gathers batch ``offset + s % cycle_length``
+                        with ``lax.dynamic_index_in_dim`` for each of the
+                        ``wrap_steps`` lockstep steps, instead of the host
+                        replaying the stream to the global lockstep length.
 
 Kernel routing (``cfg.use_pallas`` / ``cfg.kernel_backend``) happens inside
 ``models.step_loss``: the neighbor-aggregation attention and the GRU memory
@@ -70,6 +77,8 @@ def scan_train_epoch(
     opt: Optimizer,
     axis: Optional[str] = None,
     cycle_length=None,       # () int array or None
+    wrap_steps: Optional[int] = None,
+    wrap_offset=0,           # () int array — batch-grid start row
 ):
     """One training epoch as a single scan (traced; jit/vmap/shard_map it).
 
@@ -77,8 +86,18 @@ def scan_train_epoch(
     (steps,).  With ``cycle_length`` set, ``state`` is the backup taken at
     the end of the last *complete* data cycle (paper Alg.2 lines 10-11);
     otherwise it is simply the post-stream state.
+
+    With ``wrap_steps`` (requires ``cycle_length``), ``batches`` holds only
+    the REAL batches — this device's ``cycle_length`` rows starting at
+    ``wrap_offset`` of a flat grid shared across devices — and the scan
+    runs ``wrap_steps`` lockstep steps, gathering batch
+    ``wrap_offset + s % cycle_length`` on device.  Identical semantics to
+    handing in a host-replayed (wrap_steps, ...) grid, at
+    O(cycle_length) instead of O(wrap_steps) host/transfer bytes.
     """
     cycling = cycle_length is not None
+    if wrap_steps is not None and not cycling:
+        raise ValueError("wrap_steps requires cycle_length")
     fresh = init_state(cfg, state["mem"].shape[0] - 1)
 
     def step_body(params, opt_state, state, batch):
@@ -102,6 +121,28 @@ def scan_train_epoch(
         return params, opt_state, state, losses
 
     n_cycle = jnp.asarray(cycle_length, jnp.int32)
+
+    if wrap_steps is not None:
+        offset = jnp.asarray(wrap_offset, jnp.int32)
+
+        def wrap_step(carry, s):
+            params, opt_state, state, backup = carry
+            batch = jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(
+                    x, offset + s % n_cycle, 0, keepdims=False),
+                batches)
+            is_start = (s % n_cycle) == 0
+            state = _tree_where(is_start, fresh, state)
+            params, opt_state, state, loss = step_body(
+                params, opt_state, state, batch)
+            is_end = ((s + 1) % n_cycle) == 0
+            backup = _tree_where(is_end, state, backup)
+            return (params, opt_state, state, backup), loss
+
+        (params, opt_state, _state, backup), losses = jax.lax.scan(
+            wrap_step, (params, opt_state, state, fresh),
+            jnp.arange(wrap_steps, dtype=jnp.int32))
+        return params, opt_state, backup, losses
 
     def scan_step(carry, batch):
         params, opt_state, state, backup, s = carry

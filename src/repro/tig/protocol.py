@@ -278,6 +278,7 @@ def run_protocol(
     eval_node_class: bool = False,
     prefetch: bool = True,
     state=None,
+    replay_train: bool = True,
 ) -> dict:
     """The replay-to-warm-memory scoring driver (paper Tab.IV/V protocol).
 
@@ -291,6 +292,12 @@ def run_protocol(
     sampling RNG see the exact in-order call sequence — prefetch on/off is
     bit-identical).
 
+    With ``replay_train=False`` the caller supplies post-train memory via
+    ``state`` (e.g. PAC's synchronized per-device memories merged back to
+    global rows) and the device replay of the train split is skipped: only
+    the neighbor history is reconstructed host-side from the train rows,
+    and scoring starts directly at val.  ``train_ap`` is then NaN.
+
     Returns a flat metric dict: ``val_ap``/``val_auc``/``test_ap``/
     ``test_auc`` (+ ``*_ap_inductive``/``*_auc_inductive`` over edges
     touching never-seen-in-train nodes), ``train_ap`` (the replay's own
@@ -302,7 +309,19 @@ def run_protocol(
     eval_fn_test = make_eval_epoch(cfg, collect_embeddings=True) \
         if eval_node_class else eval_fn
     views = list(splits.views)
+    names = ["train", "val", "test"]
     hist = [None]
+    if not replay_train:
+        from repro.tig.sampler import ChronoNeighborIndex
+
+        # the host-side half of the train replay: neighbor history as of
+        # the end of the train rows (the device half — memory — comes from
+        # the caller's ``state``)
+        tr = views[0]
+        hist[0] = ChronoNeighborIndex(
+            tr.src, tr.dst, tr.t, tr.eidx, splits.num_nodes,
+            cfg.num_neighbors, cfg.batch_size).final_snapshot()
+        views, names = views[1:], names[1:]
 
     def build(i: int) -> dict:
         batches, hist[0] = build_batch_program(
@@ -314,24 +333,25 @@ def run_protocol(
                          enabled=prefetch)
     if state is None:
         state = init_state(cfg, splits.num_nodes)
-    results = []
+    results = {}
     for i, view in enumerate(views):
         host, dev = pf.get(i)
+        is_test = names[i] == "test"
         res = score_stream(
             params, cfg, state, host, tables_j,
-            eval_fn_test if i == 2 else eval_fn,
-            inductive_edge_mask=None if i == 0
+            eval_fn_test if is_test else eval_fn,
+            inductive_edge_mask=None if names[i] == "train"
             else splits.inductive_edge_mask(view),
-            collect_embeddings=(i == 2 and eval_node_class),
+            collect_embeddings=(is_test and eval_node_class),
             device_batches_j=dev,
         )
         state = res["state"]
-        results.append(res)
+        results[names[i]] = res
 
     nan = float("nan")
-    tr, va, te = results
+    va, te = results["val"], results["test"]
     out = {
-        "train_ap": tr["ap"],
+        "train_ap": results["train"]["ap"] if replay_train else nan,
         "val_ap": va["ap"],
         "val_auc": va["auc"],
         "val_ap_inductive": va.get("ap_inductive", nan),
@@ -345,7 +365,7 @@ def run_protocol(
     if eval_node_class and te.get("embeddings") is not None \
             and te.get("labels") is not None:
         mx = -1
-        for v in views:
+        for v in splits.views:
             if v.labels is not None and (v.labels >= 0).any():
                 mx = max(mx, int(v.labels[v.labels >= 0].max()))
         if mx >= 0:

@@ -136,17 +136,26 @@ class ShardedStream:
                        mmap_mode="r" if mmap else None)
 
     def edge_chunks(
-        self,
-    ) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+        self, *, features: bool = False,
+    ) -> Iterator[tuple]:
         """Yield (src, dst, t, eidx) per shard — id columns are materialized
-        chunk-sized, ``eidx`` is the global edge index of each row."""
+        chunk-sized, ``eidx`` is the global edge index of each row.
+
+        With ``features=True`` each tuple additionally carries the shard's
+        (e_s, d_e) float32 edge-feature rows — materialized ONE shard at a
+        time, so out-of-core consumers (e.g. PAC's per-device localization)
+        never hold the full table."""
         offsets = self.shard_offsets()
         for s in range(self.num_shards):
             src = np.asarray(self.load(s, "src"))
             dst = np.asarray(self.load(s, "dst"))
             t = np.asarray(self.load(s, "t"))
             eidx = np.arange(offsets[s], offsets[s + 1], dtype=np.int64)
-            yield src, dst, t, eidx
+            if features:
+                efeat = np.asarray(self.load(s, "efeat"), dtype=np.float32)
+                yield src, dst, t, eidx, efeat
+            else:
+                yield src, dst, t, eidx
 
     def column(self, field: str) -> np.ndarray:
         """Materialize one id/label column across all shards (small: 8 bytes

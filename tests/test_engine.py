@@ -113,9 +113,11 @@ def test_train_epoch_accepts_stacked_and_list_batches():
 
 
 def test_pac_epoch_matches_reference_loop():
-    """make_pac_epoch (vmap over the shared scan program) vs a hand-rolled
-    python loop implementing Alg.2: per-device cycle reset, mean-of-grads
-    DDP update, cycle-end backup, latest-timestamp shared sync."""
+    """make_pac_epoch (vmap over the shared scan program, device-side
+    Alg.2 wrap-around over the flat real-batch grid) vs a hand-rolled
+    python loop implementing Alg.2: per-device cycle reset, wrap-around
+    batch lookup, mean-of-grads DDP update, cycle-end backup,
+    latest-timestamp shared sync."""
     g = synthetic_tig("tiny", seed=0)
     train_g, _, _, _ = chronological_split(g)
     n_dev = 2
@@ -136,6 +138,7 @@ def test_pac_epoch_matches_reference_loop():
     p_e, o_e, states_e, losses_e = epoch_fn(
         params, opt_state,
         {k: jnp.asarray(v) for k, v in plan.batches.items()},
+        jnp.asarray(plan.offsets),
         jnp.asarray(plan.n_batches), jnp.asarray(plan.nfeat_local),
         jnp.asarray(plan.efeat_local), jnp.asarray(plan.shared_local))
 
@@ -154,7 +157,9 @@ def test_pac_epoch_matches_reference_loop():
         for k in range(n_dev):
             if s % int(plan.n_batches[k]) == 0:
                 states[k] = init_state(cfg, plan.capacity)
-            batch = {key: jnp.asarray(v[k, s])
+            # Alg.2 wrap-around: this device's row of the flat real grid
+            row = int(plan.offsets[k]) + s % int(plan.n_batches[k])
+            batch = {key: jnp.asarray(v[row])
                      for key, v in plan.batches.items()}
             (loss, (states[k], _)), grads = vg(p_ref, states[k], batch,
                                                tables[k], cfg=cfg)

@@ -35,9 +35,13 @@ def test_plan_epoch_shapes_and_schedule():
     plan = plan_epoch(train_g, part.node_lists(), part.shared_nodes,
                       CFG, rng, time_scale=time_scale_of(train_g.t))
     n_dev = 4
-    assert plan.batches["src"].shape[0] == n_dev
-    assert plan.batches["src"].shape[1] == plan.steps
-    assert plan.batches["src"].shape[2] == CFG.batch_size
+    # transfer-minimal layout: flat grid of ONLY the real batches
+    total_real = int(plan.n_batches.sum())
+    assert plan.batches["src"].shape[0] == total_real
+    assert plan.batches["src"].shape[1] == CFG.batch_size
+    assert plan.offsets.shape == (n_dev,)
+    np.testing.assert_array_equal(
+        plan.offsets, np.concatenate([[0], np.cumsum(plan.n_batches)[:-1]]))
     assert plan.n_batches.max() == plan.steps
     assert (plan.edges_per_device > 0).all()
     # shared nodes present on all devices
@@ -45,12 +49,29 @@ def test_plan_epoch_shapes_and_schedule():
     assert (plan.shared_local >= 0).all()
     # localized ids stay within capacity
     assert plan.batches["src"].max() < plan.capacity
-    # wrap-around: device with fewest batches replays its first batch
-    kmin = int(np.argmin(plan.n_batches))
-    nb = int(plan.n_batches[kmin])
-    if nb < plan.steps:
-        np.testing.assert_array_equal(
-            plan.batches["src"][kmin, nb], plan.batches["src"][kmin, 0])
+
+
+def test_plan_epoch_host_replay_oracle_layout():
+    """host_replay=True keeps the legacy replayed (N_dev, steps, ...) grid,
+    row-for-row the wrap-around expansion of the flat plan."""
+    g, train_g, part = setup_case()
+    rng = np.random.default_rng(0)
+    plan = plan_epoch(train_g, part.node_lists(), part.shared_nodes,
+                      CFG, rng, time_scale=time_scale_of(train_g.t))
+    rng = np.random.default_rng(0)
+    old = plan_epoch(train_g, part.node_lists(), part.shared_nodes,
+                     CFG, rng, time_scale=time_scale_of(train_g.t),
+                     host_replay=True)
+    assert old.host_replay and old.offsets is None
+    assert old.batches["src"].shape[:2] == (4, old.steps)
+    np.testing.assert_array_equal(old.n_batches, plan.n_batches)
+    for key, v in old.batches.items():
+        for k in range(4):
+            rows = plan.offsets[k] + \
+                np.arange(old.steps) % plan.n_batches[k]
+            np.testing.assert_array_equal(v[k], plan.batches[key][rows])
+    # the flat plan ships no more bytes than the replayed one
+    assert plan.grid_bytes() <= old.grid_bytes()
 
 
 def test_pac_train_loss_decreases_and_balanced():
