@@ -1,0 +1,105 @@
+"""Device-side epoch planning benchmark: staged-grid H2D bytes + plan time.
+
+PR 6 moves temporal-neighbor sampling onto the device: instead of the host
+pre-sampling nine (steps, B, K) neighbor grids per stream and re-shipping
+them EVERY epoch (``plan="host"``), the planner exports each stream's
+T-CSR once (``ChronoNeighborIndex.device_export``) and ships raw edge
+records only — the scanned step binary-searches the batch boundary and
+gathers its own neighbor windows (``kernels.neighbor_sample``).
+
+This module measures, on the deliberately imbalanced 4-device PAC split of
+a synthetic stream (the same Tab.VII regime as ``benchmarks.pac_plan``):
+
+  * plan wall-time (host pre-sampling is the dominant planning cost),
+  * staged-grid H2D bytes (``EpochPlan.grid_bytes``),
+  * total per-epoch H2D bytes including the staged T-CSR
+    (``EpochPlan.plan_bytes`` — the T-CSR is epoch-invariant but charged
+    here anyway, making the comparison conservative),
+  * the analytic model (``roofline.kernel_bytes.epoch_plan_bytes``) next
+    to the measured numbers.
+
+The >= 2x H2D reduction on the imbalanced scenario is asserted here (CI
+runs this module), as is raw-record bit-equality between the two plans.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from benchmarks.pac_plan import _imbalanced_node_lists
+
+
+def _measure(g, node_lists, cfg, *, plan, time_scale):
+    from repro.tig.distributed import plan_epoch
+
+    shared = np.zeros(0, dtype=np.int64)
+    rng = np.random.default_rng(0)
+    with timer() as t:
+        ep = plan_epoch(g, node_lists, shared, cfg, rng,
+                        time_scale=time_scale, host_replay=False, plan=plan)
+    return ep, {
+        "plan_s": t.s,
+        "grid_mb": ep.grid_bytes() / 1e6,
+        "tcsr_mb": ep.tcsr_bytes() / 1e6,
+        "h2d_mb": ep.plan_bytes() / 1e6,
+        "steps": ep.steps,
+        "real_batches": int(ep.n_batches.sum()),
+    }
+
+
+def run(fast: bool = True):
+    from repro.roofline.kernel_bytes import epoch_plan_bytes
+    from repro.tig.data import synthetic_tig
+    from repro.tig.models import TIGConfig
+
+    name = "wikipedia-s" if fast else "ml25m-s"
+    g = synthetic_tig(name, seed=0)
+    cfg = TIGConfig(flavor="tgn", dim=32, dim_time=16, dim_edge=g.dim_edge,
+                    dim_node=g.dim_node, num_neighbors=5, batch_size=100)
+    node_lists = _imbalanced_node_lists(g)
+    from repro.tig.train import time_scale_of
+    scale = time_scale_of(g.t)
+
+    plan_host, m_host = _measure(g, node_lists, cfg,
+                                 plan="host", time_scale=scale)
+    plan_dev, m_dev = _measure(g, node_lists, cfg,
+                               plan="device", time_scale=scale)
+
+    # the device plan's raw records must be the host plan's, bit for bit —
+    # only the nine pre-sampled neighbor grids may differ (absent)
+    for key in plan_dev.batches:
+        np.testing.assert_array_equal(plan_dev.batches[key],
+                                      plan_host.batches[key])
+    assert not any(k.startswith("nbr") for k in plan_dev.batches)
+
+    # analytic model on the equivalent single-stream plan, for reference
+    model = epoch_plan_bytes(
+        steps=int(plan_host.n_batches.sum()), batch=cfg.batch_size,
+        k=cfg.num_neighbors, num_nodes=g.num_nodes, total_events=2 * g.num_edges)
+
+    rows = [
+        {"plan": "host (pre-sampled grids)", "dataset": name, **m_host,
+         "model_h2d_mb": model["host"] / 1e6},
+        {"plan": "device (T-CSR + kernel)", "dataset": name, **m_dev,
+         "model_h2d_mb": model["device"] / 1e6},
+    ]
+    ratio = m_host["h2d_mb"] / m_dev["h2d_mb"]
+    grid_ratio = m_host["grid_mb"] / m_dev["grid_mb"]
+    for r in rows:
+        r["h2d_reduction_vs_host"] = m_host["h2d_mb"] / r["h2d_mb"]
+    print(f"staged-plan H2D reduction: {ratio:.2f}x "
+          f"(grid-only: {grid_ratio:.2f}x)")
+    assert m_dev["h2d_mb"] < m_host["h2d_mb"], (
+        "device planning must move strictly fewer H2D bytes than host "
+        f"planning, got {m_dev['h2d_mb']:.3f} vs {m_host['h2d_mb']:.3f} MB")
+    assert ratio >= 2.0, (
+        f"imbalanced scenario must cut staged-plan H2D bytes >= 2x, "
+        f"got {ratio:.2f}x")
+
+    emit("device_sampling", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,7 @@ MODULES = [
     "kernel_backward",
     "ingest_prefetch",
     "pac_plan",
+    "device_sampling",
     "protocol_sharded",
     "table3_efficiency",
     "table4_linkpred",

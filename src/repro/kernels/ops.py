@@ -36,12 +36,13 @@ from repro.kernels.flash_attention import flash_attention as _fa_pallas
 from repro.kernels.fused_flush import fused_flush_fwd as _flush_pallas
 from repro.kernels.fused_gru import fused_gru as _gru_pallas
 from repro.kernels.fused_gru import fused_gru_bwd as _gru_bwd_pallas
+from repro.kernels.neighbor_sample import neighbor_sample_fwd as _ns_pallas
 from repro.kernels.rwkv6_scan import rwkv6_chunked as _wkv_pallas
 from repro.kernels.temporal_attn import temporal_attn as _tattn_pallas
 from repro.kernels.temporal_attn import temporal_attn_bwd as _tattn_bwd_pallas
 
 __all__ = ["default_backend", "default_bwd", "gru", "temporal_attention",
-           "fused_flush", "flash_attention", "rwkv6"]
+           "fused_flush", "neighbor_sample", "flash_attention", "rwkv6"]
 
 
 @functools.cache
@@ -178,6 +179,28 @@ def fused_flush(ids, msg, ts, mem, last, wx, wh, bx, bh, *,
         return ref.flush_ref(ids, msg, ts, mem, last, wx, wh, bx, bh)
     return _flush_fused(ids, msg, ts, mem, last, wx, wh, bx, bh,
                         b == "interpret")
+
+
+def neighbor_sample(tcsr, nodes, batch_of, k, *, backend: str | None = None):
+    """K most recent temporal neighbors from a device-resident T-CSR.
+
+    ``tcsr`` is the staged dict from ``ChronoNeighborIndex.device_export``
+    (keys indptr / nbr / t / eidx / bat); nodes: (R,) int32; batch_of:
+    scalar or (R,) int32 batch index (events of stream batches >= batch_of
+    are excluded, history always included).  Returns ((R, k) ids, times,
+    edge rows), -1 / -1.0 front-padded, oldest -> newest — bit-identical
+    to ``ChronoNeighborIndex.sample``.
+
+    Forward-only: sampling produces integer ids and already-materialized
+    times before the differentiated section of the step, so there is no
+    VJP to define.
+    """
+    b = _resolve(backend)
+    args = (tcsr["indptr"], tcsr["nbr"], tcsr["t"], tcsr["eidx"],
+            tcsr["bat"], nodes, batch_of)
+    if b in ("xla", "scan"):
+        return ref.sample_ref(*args, k)
+    return _ns_pallas(*args, k=k, interpret=(b == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

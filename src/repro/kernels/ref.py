@@ -13,6 +13,7 @@ __all__ = [
     "gru_ref",
     "temporal_attention_ref",
     "flush_ref",
+    "sample_ref",
     "flash_attention_ref",
     "rwkv6_ref",
     "rwkv6_chunked_xla",
@@ -76,6 +77,47 @@ def flush_ref(ids, msg, ts, mem, last, wx, wh, bx, bh):
     mem = mem.at[ids].set(s_new).at[n_dump].set(0.0)
     last = last.at[ids].max(jnp.where(live, ts, 0.0)).at[n_dump].set(0.0)
     return mem, last, mbar
+
+
+def sample_ref(indptr, nbr, t, eidx, bat, nodes, batch_of, k):
+    """Device-side temporal neighbor sampling oracle over an exported T-CSR.
+
+    Mirrors ``ChronoNeighborIndex.sample`` bit-for-bit on device: for each
+    queried node a branchless binary search over the node's time-sorted
+    event segment finds the first event of stream batch >= ``batch_of``
+    (events carry the key ``batch + 1`` with history pinned to 0), then the
+    last-K window before it is gathered, -1 front-padded, oldest -> newest.
+
+    indptr: (N+1,) int32 and nbr / t / eidx / bat: (pad + total,) arrays
+    from ``ChronoNeighborIndex.device_export`` (front-padded by k, so the
+    window ``[end - k, end)`` never underflows); nodes: (R,) int32 node
+    ids; batch_of: scalar or (R,) int32 batch index — events of stream
+    batches >= batch_of are excluded, history always included.  Returns
+    ((R, k) int32 ids, (R, k) float32 times, (R, k) int32 edge rows).
+    """
+    total = nbr.shape[0]
+    nodes = nodes.astype(jnp.int32)
+    start = indptr[nodes]
+    stop = indptr[nodes + 1]
+    key = jnp.broadcast_to(
+        jnp.asarray(batch_of, jnp.int32) + 1, nodes.shape)
+    # branchless bisect_left for `key` within [start, stop); the iteration
+    # count is static (log2 of the buffer covers any segment length)
+    lo, hi = start, stop
+    for _ in range(max(1, int(total).bit_length())):
+        mid = (lo + hi) // 2
+        v = bat[jnp.minimum(mid, total - 1)]
+        active = lo < hi
+        go = active & (v < key)
+        lo = jnp.where(go, mid + 1, lo)
+        hi = jnp.where(active & ~go, mid, hi)
+    end = lo
+    idx = end[:, None] - k + jnp.arange(k, dtype=jnp.int32)[None, :]
+    valid = idx >= start[:, None]
+    ids = jnp.where(valid, nbr[idx], -1)
+    tms = jnp.where(valid, t[idx], jnp.float32(-1.0))
+    eix = jnp.where(valid, eidx[idx], -1)
+    return ids, tms, eix
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["OpBytes", "gru_bytes", "attn_bytes", "flush_bytes",
-           "step_pipeline_bytes"]
+           "sample_bytes", "epoch_plan_bytes", "step_pipeline_bytes"]
 
 F32 = 4
 MASK = 1       # bool
@@ -212,6 +212,73 @@ def flush_bytes(n_nodes, rows, d_msg, d_mem, *, direction="fwd", fused=True,
                 "dsums_tbl": tbl, "dmbar": 2 * msg},
                {k: v for k, v in gru_b.writes.items()
                 if k not in ("dx", "dh")}))
+
+
+# ------------------------------------------------------- neighbor sampling
+
+I32 = 4
+
+
+def sample_bytes(rows, k, total_events, *, itemsize=F32) -> OpBytes:
+    """One fused temporal-neighbor-sample launch over ``rows`` (=3B) query
+    nodes against a ``total_events``-event T-CSR (``kernels.neighbor_sample``).
+
+    The kernel is gather-bound, not compute-bound: per row it runs a
+    ceil(log2(total)) binary search over the batch-key array (one 4-byte
+    HBM probe per iteration — the DMA engine moves a full transfer lane,
+    but the *demanded* bytes are one int32) and then three K-wide window
+    DMAs (ids / times / edge rows).  start/stop/key arrive via scalar
+    prefetch.  Writes are the three (rows, K) output grids.
+    """
+    iters = max(1, int(total_events).bit_length())
+    reads = {
+        "start_stop_key_prefetch": 3 * rows * I32,
+        "bisect_probes": rows * iters * I32,
+        "nbr_window": rows * k * I32,
+        "t_window": rows * k * itemsize,
+        "eidx_window": rows * k * I32,
+    }
+    writes = {
+        "ids": rows * k * I32,
+        "times": rows * k * itemsize,
+        "eidx": rows * k * I32,
+    }
+    return OpBytes("neighbor_sample", "fwd", "fused", reads, writes)
+
+
+def epoch_plan_bytes(steps, batch, k, num_nodes, total_events, *,
+                     itemsize=F32) -> dict:
+    """Per-epoch host->device staging (H2D) bytes: ``plan="host"`` vs
+    ``plan="device"`` (``batching.build_batch_program``).
+
+    Both plans ship the raw edge records — per grid row: src/dst/neg/eidx
+    int32, t f32, valid bool (21 B).  The host plan additionally stages
+    nine pre-sampled neighbor grids (3 roles x (ids + times + edge rows) x
+    K = 12K B/row, re-shipped EVERY epoch).  The device plan instead
+    stages the stream's T-CSR once — (N+1) int32 indptr plus four
+    K-front-padded event columns (ids/times/edge rows/batch keys, 16 B per
+    event) — and the scanned step re-samples on device (``sample_bytes``,
+    HBM-local traffic, not H2D).
+
+    Returns ``{"host", "device", "host_detail", "device_detail",
+    "sample"}`` — totals in bytes, itemized dicts, and the per-step
+    on-device sampling ``OpBytes`` the device plan trades the grid H2D
+    for.
+    """
+    rows = steps * batch
+    records = rows * (4 * I32 + itemsize + MASK)
+    grids = rows * 3 * k * (2 * I32 + itemsize)
+    tcsr = (num_nodes + 1) * I32 + (total_events + k) * (3 * I32 + itemsize)
+    host = {"records": records, "neighbor_grids": grids}
+    device = {"records": records, "tcsr": tcsr}
+    return {
+        "host": int(sum(host.values())),
+        "device": int(sum(device.values())),
+        "host_detail": host,
+        "device_detail": device,
+        "sample": sample_bytes(3 * batch, k, total_events + k,
+                               itemsize=itemsize),
+    }
 
 
 # --------------------------------------------------------------- whole step

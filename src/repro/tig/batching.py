@@ -15,6 +15,12 @@ so -1 neighbor edge indices can be remapped on device.
 — the layout ``repro.tig.engine``'s scanned epoch consumes directly.
 ``build_batches`` unstacks the same plan into a list of per-batch dicts for
 callers that still step batch by batch.
+
+With ``plan="device"`` the pre-sampled neighbor grids are omitted: the
+staged grid shrinks to raw edge records (src, dst, t, feature row ids) and
+the engine samples neighbors inside the scanned step from the stream's
+device-resident T-CSR.  ``plan="host"`` (the default) stays the bit-parity
+oracle.
 """
 
 from __future__ import annotations
@@ -74,6 +80,7 @@ def build_batch_program(
     history: Optional[NeighborSnapshot] = None,
     neg_pool: Optional[np.ndarray] = None,
     index: Optional[ChronoNeighborIndex] = None,
+    plan: str = "host",
 ) -> tuple[dict, NeighborSnapshot]:
     """Fully pre-staged epoch plan: a (steps, ...) batch pytree.
 
@@ -86,11 +93,18 @@ def build_batch_program(
         out-of-core build, or one reused across epochs); mutually
         exclusive with ``history`` and validated against the stream/cfg
         shape.  Defaults to a fresh one-shot build.
+      plan: ``"host"`` pre-samples the (steps, b, k) neighbor grids here
+        (the bit-parity oracle); ``"device"`` ships only the raw edge
+        records — the engine samples each batch's neighbors on device from
+        the stream's exported T-CSR (``ChronoNeighborIndex.device_export``)
+        via ``kernels.ops.neighbor_sample``.
 
     Returns ``(batches, final_history)`` where ``batches`` maps each
     ``models.step_loss`` key to a (steps, batch, ...) array and
     ``final_history`` is the neighbor index state after the whole stream.
     """
+    if plan not in ("host", "device"):
+        raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
     b, k = cfg.batch_size, cfg.num_neighbors
     if neg_pool is None or len(neg_pool) == 0:
         neg_pool = np.unique(stream.dst)
@@ -125,6 +139,11 @@ def build_batch_program(
                "t": t, "eidx": eidx, "valid": valid}
     if stream.labels is not None:
         batches["labels"] = _padded(stream.labels, steps, b, -1)
+
+    if plan == "device":
+        # raw edge records only: the scanned step samples neighbors from
+        # the device-resident T-CSR at its own batch index
+        return batches, index.final_snapshot()
 
     # neighbors as of each row's own batch boundary (strictly-before-batch)
     batch_of = np.broadcast_to(np.arange(steps)[:, None], (steps, b))

@@ -1,0 +1,40 @@
+"""One LRU helper for the hand-rolled compiled-program caches.
+
+``engine.make_eval_epoch`` and ``distributed.pac_train`` both keep small
+dict caches of jitted epoch programs keyed by (config, shape) tuples.
+Python dicts iterate in insertion order, so move-to-end-on-hit +
+evict-front gives LRU semantics on a plain dict — no OrderedDict, and the
+caches stay introspectable/patchable as plain dicts in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Hashable, MutableMapping, TypeVar
+
+__all__ = ["lru_get"]
+
+T = TypeVar("T")
+
+_MISS = object()
+
+
+def lru_get(
+    cache: MutableMapping[Hashable, T],
+    key: Hashable,
+    max_size: int,
+    build: Callable[[], T],
+) -> T:
+    """Fetch ``key`` from ``cache`` with LRU eviction, building on miss.
+
+    A hit re-inserts the entry at the back of the iteration order (most
+    recent); a miss evicts from the front until the cache is below
+    ``max_size``, then stores ``build()``.  ``build`` is only called on a
+    miss.
+    """
+    hit = cache.pop(key, _MISS)
+    if hit is _MISS:
+        while len(cache) >= max_size:
+            cache.pop(next(iter(cache)))
+        hit = build()
+    cache[key] = hit
+    return hit

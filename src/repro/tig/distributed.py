@@ -71,6 +71,7 @@ from repro.tig.batching import (
     build_batch_program,
     concat_batch_programs,
 )
+from repro.tig.cache import lru_get
 from repro.tig.engine import scan_train_epoch
 from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state
@@ -117,10 +118,23 @@ class EpochPlan:
     edges_per_device: np.ndarray  # (N_dev,)
     offsets: Optional[np.ndarray] = None   # (N_dev,) flat-grid start rows
     host_replay: bool = False
+    tcsr: Optional[dict] = None   # device plan: {"indptr": (N_dev, cap+1),
+                                  # "nbr"/"t"/"eidx"/"bat": flat events}
 
     def grid_bytes(self) -> int:
         """Host bytes of the batch grids (what the epoch must transfer)."""
         return int(sum(np.asarray(v).nbytes for v in self.batches.values()))
+
+    def tcsr_bytes(self) -> int:
+        """Host bytes of the exported T-CSR (0 for host-sampled plans)."""
+        if self.tcsr is None:
+            return 0
+        return int(sum(np.asarray(v).nbytes for v in self.tcsr.values()))
+
+    def plan_bytes(self) -> int:
+        """Total host->device plan bytes: batch grids + (device plan only)
+        the T-CSR the sampler reads instead of pre-sampled grids."""
+        return self.grid_bytes() + self.tcsr_bytes()
 
 
 def _localize_in_memory(
@@ -264,6 +278,7 @@ def plan_epoch(
     steps_override: Optional[int] = None,
     time_scale: Optional[float] = None,
     host_replay: bool = False,
+    plan: str = "host",
 ) -> EpochPlan:
     """Localize each device's sub-graph and pre-build its batch stream.
 
@@ -274,7 +289,23 @@ def plan_epoch(
     happens on device).  ``host_replay=True`` reproduces the legacy
     host-side replay up to ``steps_per_epoch`` — kept as the bit-exact
     parity oracle.
+
+    ``plan="device"`` additionally drops the pre-sampled neighbor grids:
+    each device ships only its localized RAW edge stream and the scanned
+    step samples neighbors on device from a per-device T-CSR.  The
+    per-device ``device_export``s compose into ONE flat event buffer
+    (each device's ``indptr`` offset by the preceding devices' lengths),
+    so ``EpochPlan.tcsr`` carries a mapped (N_dev, cap+1) ``indptr``
+    plus unmapped flat ``nbr`` / ``t`` / ``eidx`` / ``bat`` arrays — no
+    per-device padding to the largest partition.  ``plan="host"`` (the
+    default) is the bit-parity oracle; ``host_replay`` implies it.
     """
+    if plan not in ("host", "device"):
+        raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
+    if host_replay and plan == "device":
+        raise ValueError(
+            "host_replay is the host-planned parity oracle; it cannot be "
+            "combined with plan='device'")
     n_dev = len(node_lists)
     local = make_local_indices(node_lists, source.num_nodes)
     cap = local[0].capacity if local else 0
@@ -296,11 +327,38 @@ def plan_epoch(
     steps = steps_override or sched.steps_per_epoch
 
     programs = []
+    exports: list[dict] = []
     for k, stream in enumerate(streams):
-        real, _ = build_batch_program(stream, cfg, rng, index=indexes[k])
+        idx = indexes[k]
+        if plan == "device" and idx is None:
+            # the host path defers to build_batch_program's one-shot build;
+            # the device plan needs the index itself to export its T-CSR
+            # (an edge-less stream yields the empty index: all -1 samples)
+            idx = ChronoNeighborIndex(
+                stream.src, stream.dst, stream.t, stream.eidx,
+                cap, cfg.num_neighbors, cfg.batch_size)
+        if plan == "device":
+            exports.append(idx.device_export())
+        real, _ = build_batch_program(
+            stream, cfg, rng,
+            # an empty stream pads to one batch, which the zero-batch
+            # index would fail shape validation against
+            index=idx if (idx is not None and stream.num_edges) else None,
+            plan=plan)
         # labels are host-side only (classification head trained post-hoc)
         real.pop("labels", None)
         programs.append(real)
+
+    tcsr = None
+    if plan == "device":
+        lens = [len(e["nbr"]) for e in exports]
+        bases = np.cumsum([0] + lens)[:-1]
+        tcsr = {
+            "indptr": np.stack([e["indptr"] + np.int32(b)
+                                for e, b in zip(exports, bases)]),
+            **{key: np.concatenate([e[key] for e in exports])
+               for key in ("nbr", "t", "eidx", "bat")},
+        }
 
     real_batches = np.array([len(p["src"]) for p in programs],
                             dtype=np.int64)
@@ -347,6 +405,7 @@ def plan_epoch(
         edges_per_device=edges_per_device,
         offsets=offsets,
         host_replay=host_replay,
+        tcsr=tcsr,
     )
 
 
@@ -363,6 +422,8 @@ def device_epoch(
     nfeat_local,    # (cap+1, d_n)
     efeat,          # (E+1, d_e) replicated
     shared_local,   # (S,) int32
+    tcsr_indptr=None,   # (cap+1,) int32 — this device's T-CSR row bounds
+    tcsr_events=None,   # flat event arrays (shared across devices)
     *,
     cfg: TIGConfig,
     opt: Optimizer,
@@ -384,20 +445,30 @@ def device_epoch(
     ``steps`` lockstep steps (Alg.2 wrap-around ON DEVICE).  With
     ``host_replay`` (the parity oracle) ``batches`` is this device's grid
     already replayed to ``steps`` rows on the host.
+
+    With ``tcsr_indptr`` / ``tcsr_events`` (a device-sampled plan,
+    ``plan_epoch(plan="device")``) the batch grid carries raw edge records
+    and the scanned step samples its neighbor grids on device: the
+    device's ``indptr`` window addresses its own segment of the shared
+    flat event buffer (the per-device exports are concatenated with
+    offset ``indptr``s, so the events arrive replicated/unmapped).
     """
     tables = {"efeat": efeat, "nfeat": nfeat_local}
     fresh = init_state(cfg, capacity)
+    tcsr = None
+    if tcsr_indptr is not None:
+        tcsr = {"indptr": tcsr_indptr, **tcsr_events}
 
     if host_replay:
         # stream length is carried by the batches pytree itself
         params, opt_state, state, losses = scan_train_epoch(
             params, opt_state, fresh, batches, tables,
-            cfg=cfg, opt=opt, axis=axis, cycle_length=n_batches)
+            cfg=cfg, opt=opt, axis=axis, cycle_length=n_batches, tcsr=tcsr)
     else:
         params, opt_state, state, losses = scan_train_epoch(
             params, opt_state, fresh, batches, tables,
             cfg=cfg, opt=opt, axis=axis, cycle_length=n_batches,
-            wrap_steps=steps, wrap_offset=offset)
+            wrap_steps=steps, wrap_offset=offset, tcsr=tcsr)
 
     # shared-node memory synchronization (paper §II-C).
     # §Perf iteration C1: instead of all-gathering the full (N_dev, S, d)
@@ -440,6 +511,7 @@ def make_pac_epoch(
     mesh: Optional[Mesh] = None,
     sync_mode: Literal["latest", "mean"] = "latest",
     host_replay: bool = False,
+    device_plan: bool = False,
 ):
     """Build the jitted epoch executor.
 
@@ -455,6 +527,13 @@ def make_pac_epoch(
     imbalanced.  (Sharding the flat grid by row ranges across hosts is the
     multi-host item on the ROADMAP.)  With ``host_replay`` the legacy
     per-device replayed grids are mapped over the device axis.
+
+    With ``device_plan`` the executor takes two extra operands — the
+    (N_dev, cap+1) mapped T-CSR ``indptr`` and the unmapped flat event
+    arrays — and the scanned step samples neighbor grids on device
+    (``plan_epoch(plan="device")`` emits both).  Note the vmap simulation
+    then routes sampling through whatever backend ``cfg`` selects; the
+    Pallas path is written for the per-device shard_map/SPMD layout.
     """
     kernel = functools.partial(
         device_epoch, cfg=cfg, opt=opt, steps=steps, capacity=capacity,
@@ -462,20 +541,22 @@ def make_pac_epoch(
     )
 
     if mesh is None:
+        in_axes = [None, None, 0 if host_replay else None, 0, 0, 0, 0, 0]
+        if device_plan:
+            in_axes += [0, None]       # indptr mapped, flat events shared
         vmapped = jax.vmap(
             kernel,
-            in_axes=(None, None, 0 if host_replay else None,
-                     0, 0, 0, 0, 0),
+            in_axes=tuple(in_axes),
             out_axes=(0, 0, 0, 0),
             axis_name="part",
         )
 
         @jax.jit
         def run(params, opt_state, batches, offsets, n_batches,
-                nfeat_local, efeat, shared_local):
+                nfeat_local, efeat, shared_local, *tcsr_args):
             p, o, state, losses = vmapped(
                 params, opt_state, batches, offsets, n_batches,
-                nfeat_local, efeat, shared_local)
+                nfeat_local, efeat, shared_local, *tcsr_args)
             # params/opt_state identical across devices (pmean'd grads)
             p0 = jax.tree.map(lambda x: x[0], p)
             o0 = jax.tree.map(lambda x: x[0], o)
@@ -487,21 +568,26 @@ def make_pac_epoch(
     rep = P()
 
     def body(params, opt_state, batches, offsets, n_batches, nfeat_local,
-             efeat, shared_local):
+             efeat, shared_local, *tcsr_args):
         squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
+        extra = (squeeze(tcsr_args[0]), tcsr_args[1]) if tcsr_args else ()
         p, o, state, losses = kernel(
             params, opt_state,
             squeeze(batches) if host_replay else batches,
             squeeze(offsets), squeeze(n_batches),
-            squeeze(nfeat_local), squeeze(efeat), squeeze(shared_local))
+            squeeze(nfeat_local), squeeze(efeat), squeeze(shared_local),
+            *extra)
         expand = lambda t: jax.tree.map(lambda x: x[None], t)
         return p, o, expand(state), expand(losses)
 
+    in_specs = (rep, rep, part if host_replay else rep,
+                part, part, part, part, part)
+    if device_plan:
+        in_specs += (part, rep)
     smapped = compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(rep, rep, part if host_replay else rep,
-                  part, part, part, part, part),
+        in_specs=in_specs,
         out_specs=(rep, rep, part, part),
     )
     return jax.jit(smapped)
@@ -582,6 +668,7 @@ def pac_train(
     mesh: Optional[Mesh] = None,
     prefetch: bool = True,
     host_replay: bool = False,
+    plan: str = "device",
     eval_graph: Optional[StreamSource] = None,
     eval_node_class: bool = False,
 ) -> PACResult:
@@ -605,6 +692,12 @@ def pac_train(
     memory-tight chips ``host_replay=True``'s device-sharded grids may be
     the better placement until row-range grid sharding lands (ROADMAP).
 
+    ``plan="device"`` (the default) ships each device only its raw-edge
+    stream plus T-CSR and samples neighbor grids inside the scanned step
+    (bit-identical to host planning); ``plan="host"`` keeps the
+    pre-sampled grids.  ``host_replay=True`` implies host planning — it
+    IS the legacy host-side oracle.
+
     ``eval_graph`` (the FULL chronological stream — ``TemporalGraph`` or
     ``ShardedStream`` — of which ``g_train`` is the train split) routes the
     trained parameters through the shared evaluation-protocol driver
@@ -618,6 +711,10 @@ def pac_train(
     """
     from repro.optim import adamw
 
+    if plan not in ("host", "device"):
+        raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
+    if host_replay:
+        plan = "host"
     small_parts = partition.node_lists()
     if isinstance(g_train, ShardedStream):
         time_scale = time_scale_of(g_train.column("t"))
@@ -639,19 +736,24 @@ def pac_train(
                 small_parts, num_devices, np.random.default_rng(seed))
         return plan_epoch(g_train, node_lists, partition.shared_nodes,
                           cfg, rng_ep, time_scale=time_scale,
-                          host_replay=host_replay)
+                          host_replay=host_replay, plan=plan)
 
-    def to_device(plan: EpochPlan):
-        offsets = plan.offsets if plan.offsets is not None else \
+    def to_device(ep_plan: EpochPlan):
+        offsets = ep_plan.offsets if ep_plan.offsets is not None else \
             np.zeros(num_devices, np.int32)
-        return plan, (
-            {k: jnp.asarray(v) for k, v in plan.batches.items()},
+        dev = [
+            {k: jnp.asarray(v) for k, v in ep_plan.batches.items()},
             jnp.asarray(offsets),
-            jnp.asarray(plan.n_batches),
-            jnp.asarray(plan.nfeat_local),
-            jnp.asarray(plan.efeat_local),
-            jnp.asarray(plan.shared_local),
-        )
+            jnp.asarray(ep_plan.n_batches),
+            jnp.asarray(ep_plan.nfeat_local),
+            jnp.asarray(ep_plan.efeat_local),
+            jnp.asarray(ep_plan.shared_local),
+        ]
+        if ep_plan.tcsr is not None:
+            dev.append(jnp.asarray(ep_plan.tcsr["indptr"]))
+            dev.append({k: jnp.asarray(v)
+                        for k, v in ep_plan.tcsr.items() if k != "indptr"})
+        return ep_plan, tuple(dev)
 
     # LRU of compiled epoch executors, mirroring make_eval_epoch's cache:
     # shuffle-combine draws alternate between a few (steps, capacity,
@@ -660,29 +762,26 @@ def pac_train(
     # (and its compilation cache) every time the key changes.
     programs: dict = {}
 
-    def epoch_program(plan: EpochPlan):
-        key = (plan.steps, plan.capacity, plan.edge_capacity)
-        fn = programs.pop(key, None)
-        if fn is None:
-            while len(programs) >= _PAC_PROGRAMS_MAX:
-                programs.pop(next(iter(programs)))
-            fn = make_pac_epoch(
-                cfg, opt, plan.steps, plan.capacity, mesh=mesh,
-                sync_mode=sync_mode, host_replay=host_replay)
-        programs[key] = fn
-        return fn
+    def epoch_program(ep_plan: EpochPlan):
+        key = (ep_plan.steps, ep_plan.capacity, ep_plan.edge_capacity)
+        return lru_get(
+            programs, key, _PAC_PROGRAMS_MAX,
+            lambda: make_pac_epoch(
+                cfg, opt, ep_plan.steps, ep_plan.capacity, mesh=mesh,
+                sync_mode=sync_mode, host_replay=host_replay,
+                device_plan=(plan == "device")))
 
-    pf = EpochPrefetcher(build, epochs, to_device=to_device,
-                         enabled=prefetch)
     all_losses = []
     last_plan = None
     states = None
-    for ep in range(epochs):
-        plan, dev = pf.get(ep)
-        params, opt_state, states, losses = epoch_program(plan)(
-            params, opt_state, *dev)
-        all_losses.append(np.asarray(losses))
-        last_plan = plan
+    with EpochPrefetcher(build, epochs, to_device=to_device,
+                         enabled=prefetch) as pf:
+        for ep in range(epochs):
+            ep_plan, dev = pf.get(ep)
+            params, opt_state, states, losses = epoch_program(ep_plan)(
+                params, opt_state, *dev)
+            all_losses.append(np.asarray(losses))
+            last_plan = ep_plan
 
     if last_plan is None:
         # epochs=0: nothing trained — still emit a consistent result

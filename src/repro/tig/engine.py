@@ -43,10 +43,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.optim import Optimizer
+from repro.tig.cache import lru_get
 from repro.tig.models import TIGConfig, init_state, step_loss
 
 __all__ = [
+    "sample_batch_neighbors",
     "scan_train_epoch",
     "scan_eval_stream",
     "make_train_epoch",
@@ -64,6 +67,36 @@ def _donate_args(*argnums: int) -> tuple[int, ...]:
     return argnums if jax.default_backend() != "cpu" else ()
 
 
+def sample_batch_neighbors(batch, tcsr, batch_of, cfg: TIGConfig):
+    """Augment a raw-edge batch with device-sampled neighbor grids.
+
+    ``batch`` is one (B,)-shaped raw batch (a ``plan="device"`` program
+    row); ``tcsr`` the staged ``ChronoNeighborIndex.device_export`` dict;
+    ``batch_of`` this row's batch index within its stream.  Adds the nine
+    ``nbr_* / nbrt_* / nbre_*`` keys exactly as the host planner would:
+    one fused (3B,) sample over src ++ dst ++ neg, with dead rows (padding
+    / invalid) redirected to node 0 and their ids/edge rows re-masked to
+    -1 afterwards — times are left as sampled, matching the host grid
+    bit-for-bit.
+    """
+    k = cfg.num_neighbors
+    b = batch["src"].shape[0]
+    ids3 = jnp.concatenate([batch["src"], batch["dst"], batch["neg"]])
+    alive = (ids3 >= 0) & jnp.tile(batch["valid"], 3)
+    clean = jnp.where(alive, ids3, 0).astype(jnp.int32)
+    nb, nt, ne = ops.neighbor_sample(
+        tcsr, clean, batch_of, k, backend=cfg.backend)
+    nb = jnp.where(alive[:, None], nb, -1)
+    ne = jnp.where(alive[:, None], ne, -1)
+    out = dict(batch)
+    for j, role in enumerate(("src", "dst", "neg")):
+        rows = slice(j * b, (j + 1) * b)
+        out[f"nbr_{role}"] = nb[rows]
+        out[f"nbrt_{role}"] = nt[rows]
+        out[f"nbre_{role}"] = ne[rows]
+    return out
+
+
 # ----------------------------------------------------------------- training
 
 def scan_train_epoch(
@@ -79,6 +112,7 @@ def scan_train_epoch(
     cycle_length=None,       # () int array or None
     wrap_steps: Optional[int] = None,
     wrap_offset=0,           # () int array — batch-grid start row
+    tcsr=None,               # staged device_export dict or None
 ):
     """One training epoch as a single scan (traced; jit/vmap/shard_map it).
 
@@ -94,13 +128,22 @@ def scan_train_epoch(
     ``wrap_offset + s % cycle_length`` on device.  Identical semantics to
     handing in a host-replayed (wrap_steps, ...) grid, at
     O(cycle_length) instead of O(wrap_steps) host/transfer bytes.
+
+    With ``tcsr`` (a staged ``ChronoNeighborIndex.device_export`` dict),
+    ``batches`` is a raw-edge program (``plan="device"``) and each step
+    samples its neighbor grids on device at its batch index — ``s`` for a
+    plain pass, ``s % cycle_length`` under replay/wrap-around (each
+    replayed row re-samples as of its REAL batch, exactly like the host
+    planner's grid for that row).
     """
     cycling = cycle_length is not None
     if wrap_steps is not None and not cycling:
         raise ValueError("wrap_steps requires cycle_length")
     fresh = init_state(cfg, state["mem"].shape[0] - 1)
 
-    def step_body(params, opt_state, state, batch):
+    def step_body(params, opt_state, state, batch, b_of):
+        if tcsr is not None:
+            batch = sample_batch_neighbors(batch, tcsr, b_of, cfg)
         (loss, (state, _aux)), grads = jax.value_and_grad(
             step_loss, has_aux=True
         )(params, state, batch, tables, cfg)
@@ -110,14 +153,18 @@ def scan_train_epoch(
         return params, opt_state, state, loss
 
     if not cycling:
-        def scan_step(carry, batch):
+        steps = jax.tree.leaves(batches)[0].shape[0]
+
+        def scan_step(carry, xs):
+            batch, s = xs
             params, opt_state, state = carry
             params, opt_state, state, loss = step_body(
-                params, opt_state, state, batch)
+                params, opt_state, state, batch, s)
             return (params, opt_state, state), loss
 
         (params, opt_state, state), losses = jax.lax.scan(
-            scan_step, (params, opt_state, state), batches)
+            scan_step, (params, opt_state, state),
+            (batches, jnp.arange(steps, dtype=jnp.int32)))
         return params, opt_state, state, losses
 
     n_cycle = jnp.asarray(cycle_length, jnp.int32)
@@ -134,7 +181,7 @@ def scan_train_epoch(
             is_start = (s % n_cycle) == 0
             state = _tree_where(is_start, fresh, state)
             params, opt_state, state, loss = step_body(
-                params, opt_state, state, batch)
+                params, opt_state, state, batch, s % n_cycle)
             is_end = ((s + 1) % n_cycle) == 0
             backup = _tree_where(is_end, state, backup)
             return (params, opt_state, state, backup), loss
@@ -150,7 +197,7 @@ def scan_train_epoch(
         is_start = (s % n_cycle) == 0
         state = _tree_where(is_start, fresh, state)
         params, opt_state, state, loss = step_body(
-            params, opt_state, state, batch)
+            params, opt_state, state, batch, s % n_cycle)
         # Alg.2 lines 10-11: back up memory at each data-cycle end
         is_end = ((s + 1) % n_cycle) == 0
         backup = _tree_where(is_end, state, backup)
@@ -181,6 +228,7 @@ def scan_eval_stream(
     *,
     cfg: TIGConfig,
     collect_embeddings: bool = False,
+    tcsr=None,
 ):
     """Forward-only scan over a chronological stream (memory keeps
     updating, params frozen).
@@ -189,9 +237,16 @@ def scan_eval_stream(
     ``pos_logit`` / ``neg_logit``, plus (steps, B, d) ``src_embed`` when
     ``collect_embeddings`` (off by default — the stack is steps*B*d floats,
     only the node-classification protocol needs it).
-    """
 
-    def scan_step(state, batch):
+    With ``tcsr`` (staged ``device_export`` dict) ``batches`` is a
+    raw-edge program and each step samples its neighbor grids on device.
+    """
+    steps = jax.tree.leaves(batches)[0].shape[0]
+
+    def scan_step(state, xs):
+        batch, s = xs
+        if tcsr is not None:
+            batch = sample_batch_neighbors(batch, tcsr, s, cfg)
         _loss, (state, aux) = step_loss(params, state, batch, tables, cfg)
         out = {"pos_logit": aux["pos_logit"],
                "neg_logit": aux["neg_logit"]}
@@ -199,7 +254,8 @@ def scan_eval_stream(
             out["src_embed"] = aux["src_embed"]
         return state, out
 
-    return jax.lax.scan(scan_step, state, batches)
+    return jax.lax.scan(scan_step, state,
+                        (batches, jnp.arange(steps, dtype=jnp.int32)))
 
 
 _EVAL_PROGRAMS: dict = {}
@@ -222,16 +278,16 @@ def make_eval_epoch(cfg: TIGConfig, *, collect_embeddings: bool = False):
 
     No buffer donation here: callers legitimately reuse the input state
     (e.g. train_single evaluates val from the epoch-end memory it also
-    keeps for the returned result)."""
+    keeps for the returned result).
+
+    The returned program accepts an optional ``tcsr=`` keyword for
+    device-planned (raw-edge) batch programs; passing it traces a second
+    variant under the same jit wrapper."""
     key = (dataclasses.astuple(cfg), collect_embeddings)
-    fn = _EVAL_PROGRAMS.pop(key, None)
-    if fn is None:
-        while len(_EVAL_PROGRAMS) >= _EVAL_PROGRAMS_MAX:
-            _EVAL_PROGRAMS.pop(next(iter(_EVAL_PROGRAMS)))
-        # the key is by VALUE: close over a defensive copy so in-place
-        # mutation of the caller's cfg can't desync a cached program
-        fn = jax.jit(functools.partial(
+    # the key is by VALUE: close over a defensive copy so in-place
+    # mutation of the caller's cfg can't desync a cached program
+    return lru_get(
+        _EVAL_PROGRAMS, key, _EVAL_PROGRAMS_MAX,
+        lambda: jax.jit(functools.partial(
             scan_eval_stream, cfg=dataclasses.replace(cfg),
-            collect_embeddings=collect_embeddings))
-    _EVAL_PROGRAMS[key] = fn   # (re-)insert at the back: most recent
-    return fn
+            collect_embeddings=collect_embeddings)))

@@ -215,6 +215,7 @@ def score_stream(
     inductive_edge_mask: Optional[np.ndarray] = None,
     collect_embeddings: bool = False,
     device_batches_j: Optional[dict] = None,
+    tcsr: Optional[dict] = None,
 ):
     """Run a chronological stream through the model (memory keeps updating,
     params frozen) as one scanned program and compute link-prediction
@@ -229,6 +230,11 @@ def score_stream(
     per scored edge (``valid.sum()``); any other length raises instead of
     silently truncating against the valid-filtered logits.
 
+    With ``tcsr`` (a staged ``ChronoNeighborIndex.device_export`` dict for
+    THIS stream, history included) ``batches`` is a raw-edge
+    ``plan="device"`` program: the scan samples each step's neighbor grids
+    on device instead of reading pre-staged ones.
+
     Returns dict with transductive AP/AUROC, inductive AP/AUROC when a mask
     is given, optional collected src embeddings + labels, and the
     post-stream state (for continuing into the next split).
@@ -237,7 +243,10 @@ def score_stream(
         batches = stack_batches(list(batches))
     bj = device_batches_j if device_batches_j is not None \
         else device_batches(batches)
-    state, aux = eval_epoch_fn(params, state, bj, tables_j)
+    if tcsr is None:
+        state, aux = eval_epoch_fn(params, state, bj, tables_j)
+    else:
+        state, aux = eval_epoch_fn(params, state, bj, tables_j, tcsr=tcsr)
 
     valid = np.asarray(batches["valid"]).reshape(-1)      # (steps*B,)
     pos = np.asarray(aux["pos_logit"]).reshape(-1)[valid]
@@ -328,25 +337,25 @@ def run_protocol(
             views[i], cfg, rng, history=hist[0], neg_pool=splits.neg_pool)
         return batches
 
-    pf = EpochPrefetcher(build, len(views),
-                         to_device=lambda b: (b, device_batches(b)),
-                         enabled=prefetch)
     if state is None:
         state = init_state(cfg, splits.num_nodes)
     results = {}
-    for i, view in enumerate(views):
-        host, dev = pf.get(i)
-        is_test = names[i] == "test"
-        res = score_stream(
-            params, cfg, state, host, tables_j,
-            eval_fn_test if is_test else eval_fn,
-            inductive_edge_mask=None if names[i] == "train"
-            else splits.inductive_edge_mask(view),
-            collect_embeddings=(is_test and eval_node_class),
-            device_batches_j=dev,
-        )
-        state = res["state"]
-        results[names[i]] = res
+    with EpochPrefetcher(build, len(views),
+                         to_device=lambda b: (b, device_batches(b)),
+                         enabled=prefetch) as pf:
+        for i, view in enumerate(views):
+            host, dev = pf.get(i)
+            is_test = names[i] == "test"
+            res = score_stream(
+                params, cfg, state, host, tables_j,
+                eval_fn_test if is_test else eval_fn,
+                inductive_edge_mask=None if names[i] == "train"
+                else splits.inductive_edge_mask(view),
+                collect_embeddings=(is_test and eval_node_class),
+                device_batches_j=dev,
+            )
+            state = res["state"]
+            results[names[i]] = res
 
     nan = float("nan")
     va, te = results["val"], results["test"]

@@ -325,6 +325,45 @@ class ChronoNeighborIndex:
         ids, tms, eix = self.sample(all_nodes, self.num_batches)
         return NeighborSnapshot(nbr=ids, time=tms, eidx=eix)
 
+    def device_export(self) -> dict[str, np.ndarray]:
+        """T-CSR as device-stageable arrays for the device-side samplers
+        (``kernels.ref.sample_ref`` / ``kernels.neighbor_sample``).
+
+        The event arrays are FRONT-PADDED with ``k`` zero entries and
+        ``indptr`` is shifted by ``k`` to match, so the samplers' last-K
+        gather window ``[end - k, end)`` is always in-bounds with no
+        clipping — degree-0 nodes, K > degree, and the empty stream all
+        fall out of the same code path (the binary search confines
+        ``end``/``start`` to real segments, which never reach into the
+        padding; out-of-segment window slots are masked by
+        ``idx >= start``).
+
+        ``bat`` stores each event's search key ``batch + 1`` (history = 0)
+        — per node it is non-decreasing in segment order, so bisecting for
+        ``batch_of + 1`` reproduces ``sample``'s ``searchsorted`` over
+        ``_bkey`` bit-for-bit.  Times are cast to float32 here, exactly
+        where ``build_batch_program`` casts the host-sampled grid.
+
+        Exports compose: several (e.g. per-PAC-device) exports can be
+        concatenated into one flat event buffer by offsetting each
+        ``indptr`` with the total length of the preceding exports.
+        """
+        pad = self.k
+        total = len(self._nbr)
+
+        def padded(arr, dtype):
+            out = np.zeros(pad + total, dtype)
+            out[pad:] = arr
+            return out
+
+        return {
+            "indptr": (self._indptr + pad).astype(np.int32),
+            "nbr": padded(self._nbr, np.int32),
+            "t": padded(self._t, np.float32),
+            "eidx": padded(self._e, np.int32),
+            "bat": padded(self._bkey % self._nb, np.int32),
+        }
+
 
 class RecentNeighborBuffer:
     """Most-recent-K temporal neighbor index (mutable, host-side).

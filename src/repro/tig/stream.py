@@ -499,6 +499,10 @@ class EpochPrefetcher:
     in flight, the double buffer.  Exceptions in the worker surface at the
     corresponding ``get`` (and cancel the pipeline: no further epoch is
     submitted).
+
+    Also a context manager: ``with EpochPrefetcher(...) as pf:`` closes
+    the pipeline on ANY exit — including an exception mid-epoch — so the
+    planner thread is joined instead of leaking past the failure.
     """
 
     def __init__(
@@ -536,14 +540,24 @@ class EpochPrefetcher:
         th.start()
 
     def close(self) -> None:
-        """Stop the pipeline early: no further epochs will be submitted and
-        any in-flight build is detached — its worker thread runs to
-        completion but the result is dropped for GC instead of staying
-        pinned (a full epoch plan, possibly on device) while the caller
-        moves on (e.g. patience-based early stop)."""
+        """Stop the pipeline early: no further epochs will be submitted,
+        any in-flight build's worker thread is JOINED (bounded wait — at
+        most one plan is ever in flight), and its result is dropped for GC
+        instead of staying pinned (a full epoch plan, possibly on device)
+        while the caller moves on (e.g. patience-based early stop or an
+        exception unwinding the training loop)."""
         self._n = 0
+        threads = list(self._threads.values())
         self._futures.clear()
         self._threads.clear()
+        for th in threads:
+            th.join()
+
+    def __enter__(self) -> "EpochPrefetcher":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     def get(self, epoch: int):
         """Block until the plan for ``epoch`` is ready (building it inline

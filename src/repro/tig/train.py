@@ -44,7 +44,15 @@ from repro.tig.protocol import (
     time_scale_of,
     train_classifier_head,
 )
+from repro.tig.sampler import ChronoNeighborIndex
 from repro.tig.stream import EpochPrefetcher
+
+
+def _stage_tcsr(index: ChronoNeighborIndex) -> dict:
+    """Stage a stream's T-CSR (``device_export``) as device arrays — done
+    ONCE per run; every epoch's scanned program samples from these buffers
+    instead of receiving pre-sampled (steps, B, 3, K) neighbor grids."""
+    return {k: jnp.asarray(v) for k, v in index.device_export().items()}
 
 __all__ = [
     "graph_as_stream",
@@ -115,16 +123,23 @@ def make_eval_step(cfg: TIGConfig):
     return step
 
 
-def train_epoch(params, opt_state, state, batches, tables_j, epoch_fn):
+def train_epoch(params, opt_state, state, batches, tables_j, epoch_fn,
+                tcsr=None):
     """One pass over prepared batches as a single scanned device program.
 
     ``batches`` is a (steps, ...) pytree (or a legacy list of per-batch
-    dicts); ``epoch_fn`` comes from ``engine.make_train_epoch``.  Returns
-    mean loss over steps.
+    dicts); ``epoch_fn`` comes from ``engine.make_train_epoch``.  With
+    ``tcsr`` (a staged ``ChronoNeighborIndex.device_export`` dict) the
+    batches are a raw-edge ``plan="device"`` program and the scan samples
+    neighbor grids on device.  Returns mean loss over steps.
     """
     bj = device_batches(batches)
-    params, opt_state, state, losses = epoch_fn(
-        params, opt_state, state, bj, tables_j)
+    if tcsr is None:
+        params, opt_state, state, losses = epoch_fn(
+            params, opt_state, state, bj, tables_j)
+    else:
+        params, opt_state, state, losses = epoch_fn(
+            params, opt_state, state, bj, tables_j, tcsr=tcsr)
     return params, opt_state, state, float(jnp.mean(losses))
 
 
@@ -152,6 +167,7 @@ def train_sharded(
     patience: int = 2,
     eval_node_class: bool = False,
     ckpt_dir: Optional[str] = None,
+    plan: str = "device",
 ) -> ShardedResult:
     """Out-of-core training over a ``tig-shards-v1`` stream.
 
@@ -159,7 +175,11 @@ def train_sharded(
     the edge-feature table is staged shard-by-shard into a donated device
     buffer (the host never holds all rows), the temporal neighbor index is
     built with the chunked T-CSR merge, and epoch plans are prefetched on
-    a worker thread while the previous epoch's scan runs.
+    a worker thread while the previous epoch's scan runs.  With
+    ``plan="device"`` (the default) the chunk-built T-CSR is additionally
+    exported to device once and epochs ship raw-edge programs — neighbor
+    grids are sampled inside the scan; ``plan="host"`` pre-samples them on
+    the host (the bit-parity oracle).
 
     With ``protocol=False`` (the legacy fast path) the whole stream is the
     train split and no evaluation runs.  With ``protocol=True`` the quality
@@ -173,9 +193,10 @@ def train_sharded(
     identical code (and identical numbers, given identical plans) to
     ``evaluate_params`` on the equivalent in-memory graph.
     """
-    from repro.tig.sampler import ChronoNeighborIndex
     from repro.tig.stream import stage_device_tables
 
+    if plan not in ("host", "device"):
+        raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
     splits: Optional[ProtocolSplits] = None
     if protocol:
         splits = split_views(shards)
@@ -221,6 +242,17 @@ def train_sharded(
     train_hist = index.final_snapshot() if protocol else None
     val_mask = splits.inductive_edge_mask(splits.val) if protocol else None
 
+    # device planning: the chunk-built T-CSR (and, under protocol, the val
+    # continuation index) is exported/staged once; epochs reuse it
+    tcsr_tr = _stage_tcsr(index) if plan == "device" else None
+    val_index, tcsr_val = None, None
+    if plan == "device" and protocol:
+        val_index = ChronoNeighborIndex(
+            splits.val.src, splits.val.dst, splits.val.t, splits.val.eidx,
+            shards.num_nodes, cfg.num_neighbors, cfg.batch_size,
+            history=train_hist)
+        tcsr_val = _stage_tcsr(val_index)
+
     own_tmp = None
     if protocol and ckpt_dir is None:
         own_tmp = tempfile.TemporaryDirectory(prefix="tig_ckpt_")
@@ -229,7 +261,7 @@ def train_sharded(
     pf = EpochPrefetcher(
         lambda ep: build_batch_program(
             stream, cfg, epoch_rng(seed, ep, 1), neg_pool=neg_pool,
-            index=index)[0],
+            index=index, plan=plan)[0],
         epochs,
         to_device=device_batches,
         enabled=prefetch,
@@ -238,37 +270,42 @@ def train_sharded(
     state = None
     best_val, best_epoch, bad = -np.inf, None, 0
     try:
-        for ep in range(epochs):
-            t0 = time.perf_counter()
-            batches = pf.get(ep)
-            state = init_state(cfg, shards.num_nodes)
-            params, opt_state, state, loss = train_epoch(
-                params, opt_state, state, batches, tables_j, epoch_fn)
-            epoch_secs.append(time.perf_counter() - t0)
-            losses.append(loss)
+        with pf:
+            for ep in range(epochs):
+                t0 = time.perf_counter()
+                batches = pf.get(ep)
+                state = init_state(cfg, shards.num_nodes)
+                params, opt_state, state, loss = train_epoch(
+                    params, opt_state, state, batches, tables_j, epoch_fn,
+                    tcsr=tcsr_tr)
+                epoch_secs.append(time.perf_counter() - t0)
+                losses.append(loss)
 
-            if not protocol:
-                continue
-            # validation continues the epoch-end memory + train history
-            val_batches, _ = build_batch_program(
-                splits.val, cfg, epoch_rng(seed, ep, 2),
-                history=train_hist, neg_pool=neg_pool)
-            res_val = score_stream(params, cfg, state, val_batches,
-                                   tables_j, eval_fn,
-                                   inductive_edge_mask=val_mask)
-            val_curve.append(res_val["ap"])
-            if res_val["ap"] > best_val:
-                best_val, best_epoch, bad = res_val["ap"], ep, 0
-                # params AND their epoch-end memory: the restored pair is a
-                # consistent training point, not best params + later state
-                save_checkpoint(ckpt_dir, ep,
-                                {"params": params, "state": state},
-                                metadata={"val_ap": float(res_val["ap"])})
-            else:
-                bad += 1
-                if bad >= patience:
-                    pf.close()      # drop the in-flight next-epoch plan
-                    break
+                if not protocol:
+                    continue
+                # validation continues the epoch-end memory + train history
+                val_batches, _ = build_batch_program(
+                    splits.val, cfg, epoch_rng(seed, ep, 2),
+                    history=None if plan == "device" else train_hist,
+                    neg_pool=neg_pool, index=val_index, plan=plan)
+                res_val = score_stream(params, cfg, state, val_batches,
+                                       tables_j, eval_fn,
+                                       inductive_edge_mask=val_mask,
+                                       tcsr=tcsr_val)
+                val_curve.append(res_val["ap"])
+                if res_val["ap"] > best_val:
+                    best_val, best_epoch, bad = res_val["ap"], ep, 0
+                    # params AND their epoch-end memory: the restored pair
+                    # is a consistent training point, not best params +
+                    # later state
+                    save_checkpoint(ckpt_dir, ep,
+                                    {"params": params, "state": state},
+                                    metadata={"val_ap": float(res_val["ap"])})
+                else:
+                    bad += 1
+                    if bad >= patience:
+                        pf.close()  # drop the in-flight next-epoch plan
+                        break
 
         metrics = None
         if protocol:
@@ -342,6 +379,7 @@ def train_single(
     seed: int = 0,
     eval_node_class: bool = False,
     prefetch: bool = True,
+    plan: str = "device",
 ) -> SingleResult:
     """The paper's single-device baseline trainer: chronological 70/15/15
     split, memory reset per epoch, val/test continue the epoch-end memory.
@@ -351,7 +389,15 @@ def train_single(
     index + batch grid) followed by one scanned device program.  With
     ``prefetch`` (the default) epoch e+1's plan is built — and moved to
     device — on a worker thread while epoch e's scan runs; per-epoch RNG
-    streams make the result bit-identical to serial planning."""
+    streams make the result bit-identical to serial planning.
+
+    ``plan="device"`` (the default) stages each split's T-CSR once and
+    ships raw-edge programs — the scanned step samples its own neighbor
+    grids on device (``kernels.ops.neighbor_sample``), shrinking per-epoch
+    H2D traffic to the edge records.  ``plan="host"`` keeps the pre-sampled
+    grids (the bit-parity oracle: identical metrics, losses, and memory)."""
+    if plan not in ("host", "device"):
+        raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
     splits = split_views(g)
     tables = make_tables(g.edge_feat, g.node_feat)
     tables_j = {k: jnp.asarray(v) for k, v in tables.items()}
@@ -369,47 +415,78 @@ def train_single(
     epoch_secs, losses = [], []
     best = {"val_ap": -1.0}
 
+    # device planning: indexes are epoch-invariant (train sees no history;
+    # val/test continue fixed snapshots), so each split's T-CSR is built
+    # and staged exactly once — val/test lazily, from the train/val
+    # end-of-stream snapshots.
+    tr_index = None
+    tcsr = {}
+    if plan == "device":
+        tr_index = ChronoNeighborIndex(
+            tr_stream.src, tr_stream.dst, tr_stream.t, tr_stream.eidx,
+            g.num_nodes, cfg.num_neighbors, cfg.batch_size)
+        tcsr["train"] = _stage_tcsr(tr_index)
+    idx = {}
+
     # double-buffered host planning: epoch e+1's train plan is built and
     # device-put on a worker thread while epoch e's scan executes.
-    pf = EpochPrefetcher(
+    with EpochPrefetcher(
         lambda ep: build_batch_program(
-            tr_stream, cfg, epoch_rng(seed, ep, 1), neg_pool=neg_pool),
+            tr_stream, cfg, epoch_rng(seed, ep, 1), neg_pool=neg_pool,
+            index=tr_index, plan=plan),
         epochs,
-        to_device=lambda plan: (device_batches(plan[0]), plan[1]),
+        to_device=lambda pr: (device_batches(pr[0]), pr[1]),
         enabled=prefetch,
-    )
-    for ep in range(epochs):
-        t0 = time.perf_counter()
-        tr_batches, hist = pf.get(ep)
-        state = init_state(cfg, g.num_nodes)  # Alg.2: reset at cycle start
-        params, opt_state, state, loss = train_epoch(
-            params, opt_state, state, tr_batches, tables_j, epoch_fn)
-        epoch_secs.append(time.perf_counter() - t0)
-        losses.append(loss)
+    ) as pf:
+        for ep in range(epochs):
+            t0 = time.perf_counter()
+            tr_batches, hist = pf.get(ep)
+            state = init_state(cfg, g.num_nodes)  # Alg.2: reset at start
+            params, opt_state, state, loss = train_epoch(
+                params, opt_state, state, tr_batches, tables_j, epoch_fn,
+                tcsr=tcsr.get("train"))
+            epoch_secs.append(time.perf_counter() - t0)
+            losses.append(loss)
 
-        # validation continues from epoch-end memory + neighbor index
-        val_batches, hist_val = build_batch_program(
-            val_stream, cfg, epoch_rng(seed, ep, 2), history=hist,
-            neg_pool=neg_pool)
-        res_val = score_stream(params, cfg, state, val_batches,
-                               tables_j, eval_fn)
-        if res_val["ap"] > best["val_ap"]:
-            test_batches, _ = build_batch_program(
-                test_stream, cfg, epoch_rng(seed, ep, 3),
-                history=hist_val, neg_pool=neg_pool)
-            res_test = score_stream(
-                params, cfg, res_val["state"], test_batches, tables_j,
-                eval_fn_test,
-                inductive_edge_mask=splits.inductive_edge_mask(test_stream),
-                collect_embeddings=eval_node_class,
-            )
-            best = {
-                "val_ap": res_val["ap"],
-                "test_ap": res_test["ap"],
-                "test_ap_inductive": res_test.get("ap_inductive",
-                                                  float("nan")),
-                "test_res": res_test,
-            }
+            # validation continues from epoch-end memory + neighbor index
+            if plan == "device" and "val" not in idx:
+                idx["val"] = ChronoNeighborIndex(
+                    val_stream.src, val_stream.dst, val_stream.t,
+                    val_stream.eidx, g.num_nodes, cfg.num_neighbors,
+                    cfg.batch_size, history=hist)
+                tcsr["val"] = _stage_tcsr(idx["val"])
+            val_batches, hist_val = build_batch_program(
+                val_stream, cfg, epoch_rng(seed, ep, 2),
+                history=None if plan == "device" else hist,
+                neg_pool=neg_pool, index=idx.get("val"), plan=plan)
+            res_val = score_stream(params, cfg, state, val_batches,
+                                   tables_j, eval_fn, tcsr=tcsr.get("val"))
+            if res_val["ap"] > best["val_ap"]:
+                if plan == "device" and "test" not in idx:
+                    idx["test"] = ChronoNeighborIndex(
+                        test_stream.src, test_stream.dst, test_stream.t,
+                        test_stream.eidx, g.num_nodes, cfg.num_neighbors,
+                        cfg.batch_size, history=hist_val)
+                    tcsr["test"] = _stage_tcsr(idx["test"])
+                test_batches, _ = build_batch_program(
+                    test_stream, cfg, epoch_rng(seed, ep, 3),
+                    history=None if plan == "device" else hist_val,
+                    neg_pool=neg_pool, index=idx.get("test"), plan=plan)
+                res_test = score_stream(
+                    params, cfg, res_val["state"], test_batches, tables_j,
+                    eval_fn_test,
+                    inductive_edge_mask=splits.inductive_edge_mask(
+                        test_stream),
+                    collect_embeddings=eval_node_class,
+                    tcsr=tcsr.get("test"),
+                )
+                best = {
+                    "val_ap": res_val["ap"],
+                    "test_ap": res_test["ap"],
+                    "test_ap_inductive": res_test.get("ap_inductive",
+                                                      float("nan")),
+                    "test_res": res_test,
+                }
 
     node_auroc = float("nan")
     if eval_node_class and g.labels is not None:
