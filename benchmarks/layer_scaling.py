@@ -1,0 +1,142 @@
+"""Multi-layer temporal attention scaling: wall-time + modeled HBM bytes
+vs ``n_layers``, padded (MXU-aligned) vs raw lanes.
+
+The stacked attention fold (``modules.stacked_temporal_attention``) runs
+ONE compiled layer block under ``lax.scan`` — per layer it adds exactly
+one attention fwd+bwd launch pair over the same 3B rows (the flush/memory
+pipeline runs once regardless of depth).  This module measures:
+
+  * epoch wall-time for n_layers in {1, 2, 3} on a small synthetic stream
+    (compile epoch and steady-state epoch reported separately — on the CPU
+    container these are informational, not asserted);
+  * modeled per-step HBM bytes from ``roofline.kernel_bytes
+    .step_pipeline_bytes`` at raw dims and at the lane-padded dims the
+    Pallas launches actually move (``lanes=True``);
+  * the per-layer byte increment, cross-checked against the standalone
+    ``attn_bytes`` fwd+bwd model (asserted within 10% — they are the same
+    model, so this guards the n_layers wiring, and it is deterministic on
+    any host);
+  * that an MXU-aligned config (the ``TIG_MXU`` preset dims) pays ZERO
+    padding tax — lane padding is a no-op when every dim is already a
+    multiple of 128.
+
+    PYTHONPATH=src python -m benchmarks.run --only layer_scaling
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+LAYER_SWEEP = (1, 2, 3)
+
+
+def _epoch_times(cfg, g, stream, tables_j, epochs=2):
+    """Per-epoch device wall-times (epoch 0 includes jit compile)."""
+    from repro.optim import adamw
+    from repro.tig.batching import build_batch_program
+    from repro.tig.engine import make_train_epoch
+    from repro.tig.models import init_params, init_state
+    from repro.tig.train import train_epoch
+
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(lr=1e-3, max_grad_norm=1.0)
+    opt_state = opt.init(params)
+    epoch_fn = make_train_epoch(cfg, opt)
+
+    times, steps = [], 0
+    for _ in range(epochs):
+        batches, _ = build_batch_program(stream, cfg, rng)
+        steps = len(batches["src"])
+        state = init_state(cfg, g.num_nodes)
+        t0 = time.perf_counter()
+        params, opt_state, state, _ = train_epoch(
+            params, opt_state, state, batches, tables_j, epoch_fn)
+        times.append(time.perf_counter() - t0)
+    return times, steps
+
+
+def run(fast: bool = True):
+    from repro.roofline.kernel_bytes import attn_bytes, step_pipeline_bytes
+    from repro.tig.data import synthetic_tig
+    from repro.tig.models import TIGConfig
+    from repro.tig.train import graph_as_stream
+
+    g = synthetic_tig("wikipedia-s", seed=0, scale=0.25 if fast else 1.0)
+    base = TIGConfig(flavor="tgn", dim=64, dim_time=32, dim_edge=g.dim_edge,
+                     dim_node=g.dim_node, num_neighbors=10, batch_size=200)
+    stream, tables = graph_as_stream(g)
+    tables_j = {k: jnp.asarray(v) for k, v in tables.items()}
+
+    # per-layer attention increment, from the standalone op model
+    head_d = base.dim // base.n_heads
+    deltas = {}
+    for lanes in (False, True):
+        pair = (attn_bytes(3 * base.batch_size, base.num_neighbors,
+                           base.n_heads, head_d, direction="fwd",
+                           lanes=lanes).total
+                + attn_bytes(3 * base.batch_size, base.num_neighbors,
+                             base.n_heads, head_d, direction="bwd",
+                             lanes=lanes).total)
+        deltas[lanes] = pair
+
+    rows = []
+    prev = {}
+    for n_layers in LAYER_SWEEP:
+        cfg = dataclasses.replace(base, n_layers=n_layers)
+        times, steps = _epoch_times(cfg, g, stream, tables_j)
+        model = {lanes: step_pipeline_bytes(
+            n_nodes=g.num_nodes, batch=cfg.batch_size, d_msg=cfg.msg_dim,
+            d_mem=cfg.dim, k_neighbors=cfg.num_neighbors,
+            n_heads=cfg.n_heads, n_layers=n_layers, lanes=lanes)
+            for lanes in (False, True)}
+        # the modeled per-layer increment must match the standalone
+        # attention fwd+bwd model within 10% (same model — guards the
+        # n_layers wiring in step_pipeline_bytes)
+        for lanes in (False, True):
+            if n_layers > 1:
+                inc = model[lanes]["fused"] - prev[lanes]
+                assert abs(inc - deltas[lanes]) <= 0.1 * deltas[lanes], (
+                    n_layers, lanes, inc, deltas[lanes])
+            prev[lanes] = model[lanes]["fused"]
+        assert model[True]["fused"] >= model[False]["fused"]
+        rows.append({
+            "n_layers": n_layers,
+            "edges": g.num_edges,
+            "steps": steps,
+            "compile_epoch_s": round(times[0], 3),
+            "epoch_s": round(times[-1], 3),
+            "edges_per_s": round(g.num_edges / times[-1]),
+            "model_step_mb_raw": model[False]["fused"] / 1e6,
+            "model_step_mb_padded": model[True]["fused"] / 1e6,
+            "pad_overhead_x": model[True]["fused"] / model[False]["fused"],
+            "model_layer_mb_raw": deltas[False] / 1e6,
+            "model_layer_mb_padded": deltas[True] / 1e6,
+        })
+        print(rows[-1])
+
+    # the TIG_MXU preset dims pay zero padding tax: msg_dim=384, per-head
+    # attention dim 128 (one head), K=16 — all already tile-aligned
+    mxu_raw = step_pipeline_bytes(n_nodes=g.num_nodes, batch=200, d_msg=384,
+                                  d_mem=128, k_neighbors=16, n_heads=1,
+                                  n_layers=2, lanes=False)
+    mxu_pad = step_pipeline_bytes(n_nodes=g.num_nodes, batch=200, d_msg=384,
+                                  d_mem=128, k_neighbors=16, n_heads=1,
+                                  n_layers=2, lanes=True)
+    assert mxu_pad["fused"] == mxu_raw["fused"], (
+        "MXU-aligned dims must make lane padding a no-op, got "
+        f"{mxu_pad['fused']} vs {mxu_raw['fused']}")
+
+    emit("layer_scaling", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -21,6 +21,28 @@ TIG = TIGConfig(
     batch_size=200,      # paper §III-A small-dataset batch size
 )
 
+# MXU-aligned 2-layer preset: every lane dim the kernels see is already a
+# multiple of 128 — dim = 128 and raw_msg_dim = 2*128 + 64 + 64 = 384 =
+# 3 x 128 — so the ops-boundary padding tier (kernels/ops.py) is a no-op
+# and the Pallas launches fill whole MXU tiles.  n_heads = 1 keeps the
+# PER-HEAD attention dim at 128 (the lane axis the kernel tiles; 2 heads
+# would halve it to 64 and reintroduce padding); num_neighbors = 16 fills
+# the 8-sublane tile of the attention K axis.  n_layers = 2 compiles the
+# stacked temporal-attention fold (ONE scanned layer block).  Not
+# paper-faithful (use TIG for Tab.III-V parity); this is the perf target.
+TIG_MXU = TIGConfig(
+    flavor="tgn",
+    dim=128,
+    dim_time=64,
+    dim_edge=64,
+    dim_node=64,
+    num_neighbors=16,
+    batch_size=200,
+    n_heads=1,
+    n_layers=2,
+    use_pallas=True,
+)
+
 FULL = ArchConfig(
     name="speed-tig",
     family="tig",

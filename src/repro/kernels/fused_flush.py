@@ -28,6 +28,14 @@ re-read a row the first occurrence already updated (the buffers are
 aliased), so the wrapper redirects every non-first occurrence's write to
 the dump row, which the final grid step re-zeroes anyway.  Reads of
 already-written rows then only happen for rows whose output is discarded.
+
+MXU alignment: the public wrapper (``kernels/ops.py``) pads ONLY the
+d_msg side (message columns + the wx gate blocks) to a multiple of 128
+lanes before calling this kernel.  The memory table is aliased in place
+and must keep its raw width — padding d_mem would force an O(N) copy and
+defeat the O(R)-traffic point of the kernel.  Padded message columns feed
+zero weight rows, so the gate pre-activations (and hence mem/last/mbar on
+the raw columns) are bit-identical to the unpadded call.
 """
 
 from __future__ import annotations

@@ -17,10 +17,12 @@ Per grid step (one query row):
     DMAs one ``bat`` element per probe into a (1, 1) VMEM scratch, giving
     the first event of a stream batch >= the boundary (bisect_left on the
     per-event key ``batch + 1``, history = 0);
-  * one K-wide async copy per output array gathers the trailing window
-    ``[end - K, end)`` of neighbor ids / times / edge rows into VMEM —
+  * one K-wide async copy per output array gathers the K-wide window
+    ``[end - (w+1)K, end - wK)`` of neighbor ids / times / edge rows into
+    VMEM (w = the per-row window shift riding in scalar prefetch; 0 = the
+    trailing K, the multi-layer fold asks for older windows per layer) —
     in-bounds by construction because the export front-pads the buffers by
-    K and shifts ``indptr``;
+    K x depth and shifts ``indptr``;
   * slots before ``start`` are masked to the -1 / -1.0 padding with a
     ``broadcasted_iota`` validity mask.
 
@@ -47,7 +49,7 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["neighbor_sample_fwd"]
 
 
-def _sample_kernel(start_ref, stop_ref, key_ref,
+def _sample_kernel(start_ref, stop_ref, key_ref, win_ref,
                    bat_hbm, nbr_hbm, t_hbm, e_hbm,
                    ids_out, t_out, e_out,
                    bat_s, nbr_s, t_s, e_s, sem_b, sem_n, sem_t, sem_e,
@@ -56,6 +58,7 @@ def _sample_kernel(start_ref, stop_ref, key_ref,
     start = start_ref[i]
     stop = stop_ref[i]
     key = key_ref[i]
+    win = win_ref[i]
 
     def probe(_, carry):
         lo, hi = carry
@@ -73,7 +76,11 @@ def _sample_kernel(start_ref, stop_ref, key_ref,
 
     end, _ = jax.lax.fori_loop(0, iters, probe, (start, stop))
 
-    w = end - k        # >= 0: the export front-pads the event arrays by k
+    # window ``win`` gathers [end-(win+1)k, end-win*k): in-bounds for any
+    # win < export depth (the export front-pads the event arrays by
+    # k*depth); the max(., 0) guards callers passing deeper windows, whose
+    # out-of-segment slots the validity mask already kills
+    w = jnp.maximum(end - (win + 1) * k, 0)
     copies = [
         pltpu.make_async_copy(hbm.at[0, pl.ds(w, k)], dst.at[0, :], sem)
         for hbm, dst, sem in ((nbr_hbm, nbr_s, sem_n),
@@ -94,13 +101,15 @@ def _sample_kernel(start_ref, stop_ref, key_ref,
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def neighbor_sample_fwd(indptr, nbr, t, eidx, bat, nodes, batch_of, *,
-                        k: int, interpret: bool = False):
+                        k: int, interpret: bool = False, window=None):
     """K most recent neighbors of ``nodes`` as of batch ``batch_of``.
 
     indptr: (N+1,) int32; nbr / t / eidx / bat: (pad + total,) event arrays
     from ``ChronoNeighborIndex.device_export``; nodes: (R,) int32;
-    batch_of: scalar or (R,) int32.  Returns ((R, k) int32 ids, (R, k)
-    float32 times, (R, k) int32 edge rows) matching ``ref.sample_ref``.
+    batch_of: scalar or (R,) int32; window: None (= 0, most recent),
+    scalar, or (R,) int32 per-row K-window shift (multi-layer grids).
+    Returns ((R, k) int32 ids, (R, k) float32 times, (R, k) int32 edge
+    rows) matching ``ref.sample_ref``.
     """
     r = nodes.shape[0]
     total = nbr.shape[0]
@@ -108,14 +117,16 @@ def neighbor_sample_fwd(indptr, nbr, t, eidx, bat, nodes, batch_of, *,
     start = indptr[nodes]
     stop = indptr[nodes + 1]
     key = jnp.broadcast_to(jnp.asarray(batch_of, jnp.int32) + 1, (r,))
+    window = 0 if window is None else window
+    win = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (r,))
 
     kernel = functools.partial(
         _sample_kernel, iters=max(1, int(total).bit_length()),
         k=k, total=total)
     hbm = pl.BlockSpec(memory_space=pltpu.ANY)
-    row = lambda i, s, e, b: (i, 0)
+    row = lambda i, s, e, b, w: (i, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(r,),
         in_specs=[hbm, hbm, hbm, hbm],               # bat, nbr, t, eidx
         out_specs=[pl.BlockSpec((1, k), row),
@@ -141,6 +152,6 @@ def neighbor_sample_fwd(indptr, nbr, t, eidx, bat, nodes, batch_of, *,
             jax.ShapeDtypeStruct((r, k), jnp.int32),
         ],
         interpret=interpret,
-    )(start, stop, key,
+    )(start, stop, key, win,
       bat[None, :], nbr[None, :], t[None, :], eidx[None, :])
     return ids, tms, eix

@@ -79,21 +79,24 @@ def flush_ref(ids, msg, ts, mem, last, wx, wh, bx, bh):
     return mem, last, mbar
 
 
-def sample_ref(indptr, nbr, t, eidx, bat, nodes, batch_of, k):
+def sample_ref(indptr, nbr, t, eidx, bat, nodes, batch_of, k, window=0):
     """Device-side temporal neighbor sampling oracle over an exported T-CSR.
 
     Mirrors ``ChronoNeighborIndex.sample`` bit-for-bit on device: for each
     queried node a branchless binary search over the node's time-sorted
     event segment finds the first event of stream batch >= ``batch_of``
     (events carry the key ``batch + 1`` with history pinned to 0), then the
-    last-K window before it is gathered, -1 front-padded, oldest -> newest.
+    K-wide window ``[end-(w+1)k, end-wk)`` before it is gathered, -1
+    front-padded, oldest -> newest (w = ``window``, default 0 = most
+    recent; the multi-layer fold passes per-row windows).
 
     indptr: (N+1,) int32 and nbr / t / eidx / bat: (pad + total,) arrays
-    from ``ChronoNeighborIndex.device_export`` (front-padded by k, so the
-    window ``[end - k, end)`` never underflows); nodes: (R,) int32 node
+    from ``ChronoNeighborIndex.device_export`` (front-padded by k*depth,
+    so every window w < depth never underflows); nodes: (R,) int32 node
     ids; batch_of: scalar or (R,) int32 batch index — events of stream
-    batches >= batch_of are excluded, history always included.  Returns
-    ((R, k) int32 ids, (R, k) float32 times, (R, k) int32 edge rows).
+    batches >= batch_of are excluded, history always included; window:
+    scalar or (R,) int32.  Returns ((R, k) int32 ids, (R, k) float32
+    times, (R, k) int32 edge rows).
     """
     total = nbr.shape[0]
     nodes = nodes.astype(jnp.int32)
@@ -101,6 +104,7 @@ def sample_ref(indptr, nbr, t, eidx, bat, nodes, batch_of, k):
     stop = indptr[nodes + 1]
     key = jnp.broadcast_to(
         jnp.asarray(batch_of, jnp.int32) + 1, nodes.shape)
+    win = jnp.broadcast_to(jnp.asarray(window, jnp.int32), nodes.shape)
     # branchless bisect_left for `key` within [start, stop); the iteration
     # count is static (log2 of the buffer covers any segment length)
     lo, hi = start, stop
@@ -112,8 +116,12 @@ def sample_ref(indptr, nbr, t, eidx, bat, nodes, batch_of, k):
         lo = jnp.where(go, mid + 1, lo)
         hi = jnp.where(active & ~go, mid, hi)
     end = lo
-    idx = end[:, None] - k + jnp.arange(k, dtype=jnp.int32)[None, :]
+    idx = (end[:, None] - (win[:, None] + 1) * k
+           + jnp.arange(k, dtype=jnp.int32)[None, :])
     valid = idx >= start[:, None]
+    # in-bounds even if a caller passes window >= export depth (those
+    # slots are already masked invalid); a no-op at window = 0
+    idx = jnp.maximum(idx, 0)
     ids = jnp.where(valid, nbr[idx], -1)
     tms = jnp.where(valid, t[idx], jnp.float32(-1.0))
     eix = jnp.where(valid, eidx[idx], -1)

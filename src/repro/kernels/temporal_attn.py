@@ -16,6 +16,14 @@ Tiling: grid over row blocks (block_b); K and the head dims live entirely in
 registers/VMEM.  The mask handles both empty slots and rows with zero
 neighbors (output exactly 0 — matching the oracle and the model semantics
 for never-seen nodes).
+
+The kernel itself is shape-generic, but the public wrapper
+(``kernels/ops.py``) pads the head dim D to a multiple of 128 lanes and K
+to a multiple of 8 sublanes before calling it, so the QK^T/AV contractions
+here always see MXU-aligned tiles.  Padded K slots arrive with
+``mask=False`` (they never contribute); the padded tail of D is zeros on
+both q and k, with q pre-scaled so the 1/sqrt(D_padded) below equals the
+raw 1/sqrt(D) — the wrapper's padding is value-invariant.
 """
 
 from __future__ import annotations

@@ -22,6 +22,15 @@ Modeling conventions (documented per op below):
 
 Every model returns an ``OpBytes`` with an itemized ``reads``/``writes``
 dict so benchmark CSVs can show where the bytes go.
+
+Lane padding (``lanes=True``): the Pallas wrappers in ``kernels/ops.py``
+pad every contraction/lane dim the kernels see to a multiple of 128 lanes
+(and the attention K axis to 8 sublanes) so the MXU gets aligned tiles.
+The byte models here default to the RAW dims — call with ``lanes=True`` to
+model what the padded launches actually move.  Guard rule: a model asked
+about a non-multiple-of-128 dim is reporting *demanded* bytes only when
+``lanes=False``; compare both to see the padding tax (typically small —
+the padded columns ride in the same DMA lanes the hardware moves anyway).
 """
 
 from __future__ import annotations
@@ -29,10 +38,23 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["OpBytes", "gru_bytes", "attn_bytes", "flush_bytes",
-           "sample_bytes", "epoch_plan_bytes", "step_pipeline_bytes"]
+           "sample_bytes", "epoch_plan_bytes", "step_pipeline_bytes",
+           "lane_pad", "sublane_pad"]
 
 F32 = 4
 MASK = 1       # bool
+LANES = 128    # f32 MXU/VREG lane count — last-dim tile
+SUBLANES = 8   # f32 sublane count — second-to-last-dim tile
+
+
+def lane_pad(n: int) -> int:
+    """Round ``n`` up to the 128-lane tile the ops-boundary padding uses."""
+    return -(-int(n) // LANES) * LANES
+
+
+def sublane_pad(n: int) -> int:
+    """Round ``n`` up to the 8-sublane tile (attention K axis)."""
+    return -(-int(n) // SUBLANES) * SUBLANES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +89,7 @@ def _merge(*dicts):
 # ------------------------------------------------------------------- GRU
 
 def gru_bytes(b, d_in, d_h, *, direction="fwd", fused=True,
-              itemsize=F32) -> OpBytes:
+              lanes=False, itemsize=F32) -> OpBytes:
     """h' = GRU(x, h) over (b, d_in) x (b, d_h) rows.
 
     unfused fwd: two gate matmuls materialize gx/gh (b, 3*d_h) in HBM, a
@@ -75,7 +97,13 @@ def gru_bytes(b, d_in, d_h, *, direction="fwd", fused=True,
     that forward, materializes the r/z/n/nh residuals and the dgx/dgh gate
     cotangents, then runs 4 matmuls over them.  fused bwd: recomputes the
     gates in VMEM — one read per operand, one write per gradient.
+
+    ``lanes=True`` models the lane-padded launch ``kernels/ops.py``
+    actually makes: d_in and d_h rounded up to 128 (every gate block
+    padded, so gx/gh are 3 * lane_pad(d_h) wide).
     """
+    if lanes:
+        d_in, d_h = lane_pad(d_in), lane_pad(d_h)
     x, h = b * d_in * itemsize, b * d_h * itemsize
     wx, wh = d_in * 3 * d_h * itemsize, d_h * 3 * d_h * itemsize
     bias = 2 * 3 * d_h * itemsize
@@ -109,14 +137,20 @@ def gru_bytes(b, d_in, d_h, *, direction="fwd", fused=True,
 # ------------------------------------------------------- temporal attention
 
 def attn_bytes(b, k, h, d, *, direction="fwd", fused=True,
-               itemsize=F32) -> OpBytes:
+               lanes=False, itemsize=F32) -> OpBytes:
     """Masked neighbor attention over q (b,h,d), k/v (b,k,h,d), mask (b,k).
 
     unfused fwd: QK^T materializes scores (b,h,k), softmax+zero-fix
     re-reads/rewrites them, AV re-reads.  oracle bwd: replays that, then
     materializes datt/ds cotangents for the dq/dk/dv einsums.  fused bwd:
     softmax recomputed in VMEM — one pass per operand/gradient.
+
+    ``lanes=True`` models the lane-padded launch ``kernels/ops.py`` makes:
+    head dim d rounded up to 128 lanes, neighbor axis k to 8 sublanes
+    (padded slots carry mask=False but still ride the DMA).
     """
+    if lanes:
+        k, d = sublane_pad(k), lane_pad(d)
     q = b * h * d * itemsize
     kv = b * k * h * d * itemsize
     mask = b * k * MASK
@@ -151,9 +185,14 @@ def attn_bytes(b, k, h, d, *, direction="fwd", fused=True,
 # ------------------------------------------------------------ message flush
 
 def flush_bytes(n_nodes, rows, d_msg, d_mem, *, direction="fwd", fused=True,
-                itemsize=F32) -> OpBytes:
+                lanes=False, itemsize=F32) -> OpBytes:
     """The flush_pending message pipeline: segment-mean over ``rows``
     (=2B) pending messages, GRU update, scatter of mem/last.
+
+    ``lanes=True`` pads ONLY the d_msg side (message columns + wx gate
+    rows) to 128 lanes, matching ``kernels/ops.py``: the memory table is
+    aliased in place, so d_mem stays raw — padding it would force an O(N)
+    copy and defeat the kernel's O(rows)-traffic point.
 
     unfused fwd: materializes the (N+1, d_msg) scatter-add sums table and
     the (N+1,) counts, divides over the FULL table (read+write), gathers
@@ -164,6 +203,8 @@ def flush_bytes(n_nodes, rows, d_msg, d_mem, *, direction="fwd", fused=True,
     memory cotangent) — the fused win in the backward comes from the GRU /
     attention kernels, not the flush.
     """
+    if lanes:
+        d_msg = lane_pad(d_msg)
     msg = rows * d_msg * itemsize
     memrows = rows * d_mem * itemsize
     ids = rows * 4
@@ -284,10 +325,17 @@ def epoch_plan_bytes(steps, batch, k, num_nodes, total_events, *,
 # --------------------------------------------------------------- whole step
 
 def step_pipeline_bytes(n_nodes, batch, d_msg, d_mem, k_neighbors, n_heads,
-                        *, itemsize=F32) -> dict:
+                        *, n_layers=1, lanes=False, itemsize=F32) -> dict:
     """Modeled HBM bytes for the kernelized portion of one training step
     (flush pipeline + the 3B-row embedding attention), fwd + bwd, fused vs
     unfused.  Returns {"fused": bytes, "unfused": bytes, "detail": [...]}.
+
+    ``n_layers``: the stacked temporal-attention fold runs one attention
+    launch per layer over the same 3B rows (the scanned layer block), so
+    the attention fwd+bwd parts repeat per layer — the flush runs once
+    regardless.  ``lanes=True`` models the lane-padded launches (see the
+    per-op models).  ``detail`` holds one OpBytes per modeled launch:
+    2 flush + 2 * n_layers attention entries per pipeline (8 at defaults).
     """
     head_d = d_mem // n_heads
     out = {}
@@ -296,14 +344,21 @@ def step_pipeline_bytes(n_nodes, batch, d_msg, d_mem, k_neighbors, n_heads,
         fused = pipeline == "fused"
         parts = [
             flush_bytes(n_nodes, 2 * batch, d_msg, d_mem,
-                        direction="fwd", fused=fused, itemsize=itemsize),
+                        direction="fwd", fused=fused, lanes=lanes,
+                        itemsize=itemsize),
             flush_bytes(n_nodes, 2 * batch, d_msg, d_mem,
-                        direction="bwd", fused=fused, itemsize=itemsize),
-            attn_bytes(3 * batch, k_neighbors, n_heads, head_d,
-                       direction="fwd", fused=fused, itemsize=itemsize),
-            attn_bytes(3 * batch, k_neighbors, n_heads, head_d,
-                       direction="bwd", fused=fused, itemsize=itemsize),
+                        direction="bwd", fused=fused, lanes=lanes,
+                        itemsize=itemsize),
         ]
+        for _ in range(n_layers):
+            parts += [
+                attn_bytes(3 * batch, k_neighbors, n_heads, head_d,
+                           direction="fwd", fused=fused, lanes=lanes,
+                           itemsize=itemsize),
+                attn_bytes(3 * batch, k_neighbors, n_heads, head_d,
+                           direction="bwd", fused=fused, lanes=lanes,
+                           itemsize=itemsize),
+            ]
         out[pipeline] = sum(p.total for p in parts)
         detail.extend(parts)
     out["detail"] = detail

@@ -147,15 +147,30 @@ def build_batch_program(
 
     # neighbors as of each row's own batch boundary (strictly-before-batch)
     batch_of = np.broadcast_to(np.arange(steps)[:, None], (steps, b))
+    n_l = cfg.n_layers
     for role, ids in (("src", src), ("dst", dst), ("neg", neg)):
         alive = (ids >= 0) & valid
         clean = np.where(alive, ids, 0)
-        nb, nt, ne = index.sample(clean.ravel(), batch_of.ravel())
-        nb = nb.reshape(steps, b, k)
-        nt = nt.reshape(steps, b, k)
-        ne = ne.reshape(steps, b, k)
-        nb[~alive] = -1
-        ne[~alive] = -1
+        if n_l == 1:
+            nb, nt, ne = index.sample(clean.ravel(), batch_of.ravel())
+            nb = nb.reshape(steps, b, k)
+            nt = nt.reshape(steps, b, k)
+            ne = ne.reshape(steps, b, k)
+            nb[~alive] = -1
+            ne[~alive] = -1
+        else:
+            # (steps, L, b, k) grids — scan-layer l gets the (L-1-l)-th
+            # most-recent K-window, matching the device sampler's layout
+            # (engine.sample_batch_neighbors) row for row
+            grids = [index.sample(clean.ravel(), batch_of.ravel(),
+                                  window=w)
+                     for w in range(n_l - 1, -1, -1)]
+            nb = np.stack([g[0].reshape(steps, b, k) for g in grids], 1)
+            nt = np.stack([g[1].reshape(steps, b, k) for g in grids], 1)
+            ne = np.stack([g[2].reshape(steps, b, k) for g in grids], 1)
+            dead = ~alive[:, None, :, None]
+            nb = np.where(dead, -1, nb)
+            ne = np.where(dead, -1, ne)
         batches[f"nbr_{role}"] = nb.astype(np.int32)
         batches[f"nbrt_{role}"] = nt.astype(np.float32)
         batches[f"nbre_{role}"] = ne.astype(np.int32)

@@ -338,7 +338,7 @@ def plan_epoch(
                 stream.src, stream.dst, stream.t, stream.eidx,
                 cap, cfg.num_neighbors, cfg.batch_size)
         if plan == "device":
-            exports.append(idx.device_export())
+            exports.append(idx.device_export(depth=cfg.n_layers))
         real, _ = build_batch_program(
             stream, cfg, rng,
             # an empty stream pads to one batch, which the zero-batch
@@ -763,7 +763,14 @@ def pac_train(
     programs: dict = {}
 
     def epoch_program(ep_plan: EpochPlan):
-        key = (ep_plan.steps, ep_plan.capacity, ep_plan.edge_capacity)
+        from repro.kernels import ops as _kops
+        # cfg is fixed per pac_train call, but the executor's compiled
+        # shapes also depend on n_layers (per-layer grids) and the
+        # lane-padded dims the MXU tier launches — key them explicitly so
+        # layer-count or padding-rule changes can't reuse a stale program
+        key = (ep_plan.steps, ep_plan.capacity, ep_plan.edge_capacity,
+               cfg.n_layers, _kops.lane_pad(cfg.dim),
+               _kops.lane_pad(cfg.msg_dim))
         return lru_get(
             programs, key, _PAC_PROGRAMS_MAX,
             lambda: make_pac_epoch(

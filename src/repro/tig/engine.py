@@ -78,12 +78,35 @@ def sample_batch_neighbors(batch, tcsr, batch_of, cfg: TIGConfig):
     / invalid) redirected to node 0 and their ids/edge rows re-masked to
     -1 afterwards — times are left as sampled, matching the host grid
     bit-for-bit.
+
+    With ``cfg.n_layers > 1`` the grids come back (L, B, K): still ONE
+    fused (L*3B,) launch, with per-row windows so layer l's grid holds
+    the (L-1-l)-th most-recent K-window (the staged export must have
+    ``depth >= n_layers``).  Row l = L-1 (window 0) is bit-identical to
+    the single-layer grid.
     """
     k = cfg.num_neighbors
     b = batch["src"].shape[0]
     ids3 = jnp.concatenate([batch["src"], batch["dst"], batch["neg"]])
     alive = (ids3 >= 0) & jnp.tile(batch["valid"], 3)
     clean = jnp.where(alive, ids3, 0).astype(jnp.int32)
+    n_l = cfg.n_layers
+    if n_l > 1:
+        win = jnp.repeat(jnp.arange(n_l - 1, -1, -1, dtype=jnp.int32),
+                         3 * b)
+        nb, nt, ne = ops.neighbor_sample(
+            tcsr, jnp.tile(clean, n_l), batch_of, k,
+            backend=cfg.backend, window=win)
+        nb = jnp.where(alive[:, None], nb.reshape(n_l, 3 * b, k), -1)
+        nt = nt.reshape(n_l, 3 * b, k)
+        ne = jnp.where(alive[:, None], ne.reshape(n_l, 3 * b, k), -1)
+        out = dict(batch)
+        for j, role in enumerate(("src", "dst", "neg")):
+            rows = slice(j * b, (j + 1) * b)
+            out[f"nbr_{role}"] = nb[:, rows]
+            out[f"nbrt_{role}"] = nt[:, rows]
+            out[f"nbre_{role}"] = ne[:, rows]
+        return out
     nb, nt, ne = ops.neighbor_sample(
         tcsr, clean, batch_of, k, backend=cfg.backend)
     nb = jnp.where(alive[:, None], nb, -1)
@@ -283,7 +306,13 @@ def make_eval_epoch(cfg: TIGConfig, *, collect_embeddings: bool = False):
     The returned program accepts an optional ``tcsr=`` keyword for
     device-planned (raw-edge) batch programs; passing it traces a second
     variant under the same jit wrapper."""
-    key = (dataclasses.astuple(cfg), collect_embeddings)
+    # astuple(cfg) already covers every field (n_layers included — it is
+    # appended LAST so positional consumers stay valid); the lane-padded
+    # dims the MXU tier actually launches are keyed explicitly so a
+    # padding-rule change can never alias two different executables
+    key = (dataclasses.astuple(cfg),
+           (cfg.n_layers, ops.lane_pad(cfg.dim), ops.lane_pad(cfg.msg_dim)),
+           collect_embeddings)
     # the key is by VALUE: close over a defensive copy so in-place
     # mutation of the caller's cfg can't desync a cached program
     return lru_get(

@@ -52,6 +52,8 @@ from repro.tig.modules import (
     mlp_init,
     rnn,
     rnn_init,
+    stacked_attn_init,
+    stacked_temporal_attention,
     temporal_attention,
 )
 from repro.tig.time_encode import init_time_encoder, time_encode
@@ -80,11 +82,16 @@ class TIGConfig:
     use_pallas: bool = False   # route UPD/attention through Pallas kernels
     kernel_backend: str = "auto"  # with use_pallas: "auto" | "pallas" |
                                   # "interpret" (CPU-testable Pallas path)
+    # NOTE: new fields append at the END — cache keys use astuple(cfg) and
+    # tests index into it positionally.
+    n_layers: int = 1          # attention layers (lax.scan over a stacked
+                               # layer block when > 1; TGN/TIGE only)
 
     def __post_init__(self):
         assert self.flavor in FLAVORS, self.flavor
         assert self.kernel_backend in ("auto", "pallas", "interpret"), \
             self.kernel_backend
+        assert self.n_layers >= 1, self.n_layers
 
     @property
     def backend(self) -> str:
@@ -126,7 +133,13 @@ def init_params(key, cfg: TIGConfig) -> dict:
     if cfg.uses_attention:
         d_q = cfg.dim + cfg.dim_node + cfg.dim_time
         d_kv = cfg.dim + cfg.dim_edge + cfg.dim_time
-        p["attn"] = attn_init(ks[3], d_q, d_kv, cfg.dim, cfg.n_heads)
+        if cfg.n_layers == 1:
+            p["attn"] = attn_init(ks[3], d_q, d_kv, cfg.dim, cfg.n_heads)
+        else:
+            # stacked layer block: every leaf carries a leading (L,) axis so
+            # embed_nodes can lax.scan over ONE compiled layer
+            p["attn"] = stacked_attn_init(ks[3], cfg.n_layers, d_q, d_kv,
+                                          cfg.dim, cfg.n_heads)
     elif cfg.flavor == "jodie":
         p["jodie_w"] = jnp.zeros((cfg.dim,), jnp.float32)
         p["emb"] = dense_init(ks[3], cfg.dim + cfg.dim_node, cfg.dim)
@@ -264,17 +277,29 @@ def embed_nodes(
     if cfg.flavor == "dyrep":
         return dense(params["emb"], jnp.concatenate([s, nf], axis=-1))
 
-    # TGN / TIGE: 1-layer temporal graph attention over K recent neighbors
+    # TGN / TIGE: temporal graph attention over K recent neighbors.  The
+    # neighbor grids are (B, K) for a single layer or (L, B, K) for the
+    # multi-layer fold (one grid per layer; layer l's grid holds the
+    # (L-1-l)-th most-recent K-window so the LAST applied layer sees the
+    # freshest neighbors — exact n_layers=1 semantics at L=1).
     mask = nbr_ids >= 0
     nids = jnp.where(mask, nbr_ids, n_dump)
     eids = jnp.where(nbr_eidx >= 0, nbr_eidx, tables["efeat"].shape[0] - 1)
     s_nbr = _read_memory(cfg, state["mem"], state["mem2"], nids)
     e_nbr = tables["efeat"][eids]
+    # t is (B,): (B, 1) broadcasts against both (B, K) and (L, B, K)
     phi_nbr = time_encode(params["time"],
                           jnp.where(mask, t[:, None] - nbr_t, 0.0))
     phi_self = time_encode(params["time"], jnp.zeros_like(t))
-    q_in = jnp.concatenate([s, nf, phi_self], axis=-1)
     kv_in = jnp.concatenate([s_nbr, e_nbr, phi_nbr], axis=-1)
+    extra = jnp.concatenate([nf, phi_self], axis=-1)
+    if nbr_ids.ndim == 3:
+        # scan over the stacked layer block: ONE compiled layer, carried
+        # query refined per layer (q_in = [h ; nf ; Phi(0)], h0 = memory)
+        return stacked_temporal_attention(
+            params["attn"], s, extra, kv_in, mask,
+            n_heads=cfg.n_heads, backend=cfg.backend)
+    q_in = jnp.concatenate([s, extra], axis=-1)
     h = temporal_attention(params["attn"], q_in, kv_in, mask,
                            n_heads=cfg.n_heads, backend=cfg.backend)
     return h
@@ -295,7 +320,9 @@ def step_loss(
     ``batch`` keys: src, dst, neg (B,) int32 local ids (-1 = padding);
     t (B,) f32; efeat (B, d_e); valid (B,) bool; and per role r in
     {src, dst, neg}: nbr_{r} (B,K) ids, nbrt_{r} (B,K) times,
-    nbre_{r} (B,K) edge idx.  Optional: labels (B,) int64 (-1 unlabeled).
+    nbre_{r} (B,K) edge idx — or (L,B,K) each when cfg.n_layers > 1
+    (roles concatenate on axis=-2 either way).  Optional: labels (B,)
+    int64 (-1 unlabeled).
     """
     n_dump = state["mem"].shape[0] - 1
     valid = batch["valid"]
@@ -318,11 +345,11 @@ def step_loss(
         params, cfg, state, tables, ids_all,
         jnp.tile(batch["t"], 3),
         jnp.concatenate([batch["nbr_src"], batch["nbr_dst"],
-                         batch["nbr_neg"]]),
+                         batch["nbr_neg"]], axis=-2),
         jnp.concatenate([batch["nbrt_src"], batch["nbrt_dst"],
-                         batch["nbrt_neg"]]),
+                         batch["nbrt_neg"]], axis=-2),
         jnp.concatenate([batch["nbre_src"], batch["nbre_dst"],
-                         batch["nbre_neg"]]),
+                         batch["nbre_neg"]], axis=-2),
     )
     embeds = {"src": emb_all[:b], "dst": emb_all[b:2 * b],
               "neg": emb_all[2 * b:]}

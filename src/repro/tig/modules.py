@@ -19,6 +19,7 @@ __all__ = [
     "gru_init", "gru",
     "rnn_init", "rnn",
     "attn_init", "temporal_attention",
+    "stacked_attn_init", "stacked_temporal_attention",
 ]
 
 
@@ -131,3 +132,46 @@ def temporal_attention(
         att = jnp.where(any_nbr, att, 0.0)
         ctx = jnp.einsum("bhk,bkhd->bhd", att, vv).reshape(b, -1)
     return dense(p["o"], jnp.concatenate([query_in, ctx], axis=-1))
+
+
+def stacked_attn_init(key, n_layers: int, d_node: int, d_kv: int,
+                      d_out: int, n_heads: int) -> dict:
+    """Per-layer attention params stacked on a leading (L,) axis.
+
+    The ``Stacked``-module idiom: every leaf of ``attn_init``'s pytree gains
+    a leading layer axis so ``lax.scan`` can sweep one compiled layer block
+    over all L layers instead of unrolling L separate graphs.  Layer 0's
+    query is the memory read-out, so every layer maps d_node -> d_out and
+    requires d_out == the memory dim (true for the TGN/TIGE embedding).
+    """
+    layers = [attn_init(k, d_node, d_kv, d_out, n_heads)
+              for k in jax.random.split(key, n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def stacked_temporal_attention(
+    p_stack: dict,            # attn params, every leaf (L, ...)
+    h0: jnp.ndarray,          # (B, d) initial query state (memory read-out)
+    extra: jnp.ndarray,       # (B, d_extra) static query tail [nfeat ; Phi(0)]
+    kv_in: jnp.ndarray,       # (L, B, K, d_kv) per-layer neighbor features
+    mask: jnp.ndarray,        # (L, B, K) bool
+    n_heads: int = 2,
+    backend: str | None = "xla",
+) -> jnp.ndarray:
+    """L-layer temporal attention as a fold compiled as ONE layer block.
+
+    ``lax.scan`` carries the refined node state h; each step rebuilds the
+    layer's query as ``[h ; extra]`` and attends over that layer's neighbor
+    grid.  With L == 1 this is exactly ``temporal_attention`` on
+    ``concat([h0, extra])`` — the single-layer path bit for bit.
+    """
+
+    def body(h, layer):
+        p_l, kv_l, m_l = layer
+        q_in = jnp.concatenate([h, extra], axis=-1)
+        h = temporal_attention(p_l, q_in, kv_l, m_l,
+                               n_heads=n_heads, backend=backend)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h0, (p_stack, kv_in, mask))
+    return h

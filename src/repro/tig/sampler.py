@@ -290,23 +290,32 @@ class ChronoNeighborIndex:
         self,
         nodes: np.ndarray,
         batch_of: np.ndarray | int,
+        window: np.ndarray | int = 0,
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """K most recent neighbors of ``nodes`` as of batch ``batch_of``.
 
         ``batch_of`` is scalar or per-row: events of stream batches
         >= batch_of are excluded (history always included).  Pass
-        ``self.num_batches`` to see the whole stream.  Shapes:
+        ``self.num_batches`` to see the whole stream.  ``window`` (scalar
+        or per-row) shifts the K-wide gather back in time: window w
+        returns events ``[end-(w+1)K, end-wK)`` — w = 0 is the K most
+        recent (the default, and the only window the single-layer model
+        uses); the multi-layer fold feeds layer l the window ``L-1-l`` so
+        successive layers aggregate strictly older context.  Shapes:
         (len(nodes), K) ids / times / edge indices, oldest -> newest,
         -1 front-padded (times -1.0) — bit-identical to
-        ``RecentNeighborBuffer.sample`` after the same updates.
+        ``RecentNeighborBuffer.sample`` after the same updates (at
+        window = 0).
         """
         nodes = np.asarray(nodes, dtype=np.int64)
         batch_of = np.broadcast_to(np.asarray(batch_of, np.int64),
                                    nodes.shape)
+        window = np.broadcast_to(np.asarray(window, np.int64), nodes.shape)
         start = self._indptr[nodes]
         end = np.searchsorted(self._bkey, nodes * self._nb + (batch_of + 1),
                               side="left")
-        idx = end[:, None] - self.k + np.arange(self.k)[None, :]
+        idx = (end[:, None] - (window[:, None] + 1) * self.k
+               + np.arange(self.k)[None, :])
         valid = idx >= start[:, None]
         idx = np.clip(idx, 0, max(len(self._nbr) - 1, 0))
         if len(self._nbr) == 0:
@@ -325,18 +334,20 @@ class ChronoNeighborIndex:
         ids, tms, eix = self.sample(all_nodes, self.num_batches)
         return NeighborSnapshot(nbr=ids, time=tms, eidx=eix)
 
-    def device_export(self) -> dict[str, np.ndarray]:
+    def device_export(self, depth: int = 1) -> dict[str, np.ndarray]:
         """T-CSR as device-stageable arrays for the device-side samplers
         (``kernels.ref.sample_ref`` / ``kernels.neighbor_sample``).
 
-        The event arrays are FRONT-PADDED with ``k`` zero entries and
-        ``indptr`` is shifted by ``k`` to match, so the samplers' last-K
-        gather window ``[end - k, end)`` is always in-bounds with no
-        clipping — degree-0 nodes, K > degree, and the empty stream all
-        fall out of the same code path (the binary search confines
-        ``end``/``start`` to real segments, which never reach into the
-        padding; out-of-segment window slots are masked by
-        ``idx >= start``).
+        The event arrays are FRONT-PADDED with ``k * depth`` zero entries
+        and ``indptr`` is shifted to match, so the samplers' K-wide gather
+        window ``[end - (w+1)k, end - wk)`` is always in-bounds with no
+        clipping for every window w < depth — degree-0 nodes, K > degree,
+        and the empty stream all fall out of the same code path (the
+        binary search confines ``end``/``start`` to real segments, which
+        never reach into the padding; out-of-segment window slots are
+        masked by ``idx >= start``).  ``depth`` = the model's ``n_layers``
+        (depth 1 = the single-window export of PR 6, byte-identical
+        modulo the pad length).
 
         ``bat`` stores each event's search key ``batch + 1`` (history = 0)
         — per node it is non-decreasing in segment order, so bisecting for
@@ -348,7 +359,8 @@ class ChronoNeighborIndex:
         concatenated into one flat event buffer by offsetting each
         ``indptr`` with the total length of the preceding exports.
         """
-        pad = self.k
+        assert depth >= 1, depth
+        pad = self.k * depth
         total = len(self._nbr)
 
         def padded(arr, dtype):

@@ -48,11 +48,14 @@ from repro.tig.sampler import ChronoNeighborIndex
 from repro.tig.stream import EpochPrefetcher
 
 
-def _stage_tcsr(index: ChronoNeighborIndex) -> dict:
+def _stage_tcsr(index: ChronoNeighborIndex, depth: int = 1) -> dict:
     """Stage a stream's T-CSR (``device_export``) as device arrays — done
     ONCE per run; every epoch's scanned program samples from these buffers
-    instead of receiving pre-sampled (steps, B, 3, K) neighbor grids."""
-    return {k: jnp.asarray(v) for k, v in index.device_export().items()}
+    instead of receiving pre-sampled (steps, B, 3, K) neighbor grids.
+    ``depth`` = the model's ``n_layers`` (multi-layer folds gather one
+    K-window per layer, so the export front-pads by k*depth)."""
+    return {k: jnp.asarray(v)
+            for k, v in index.device_export(depth=depth).items()}
 
 __all__ = [
     "graph_as_stream",
@@ -244,14 +247,15 @@ def train_sharded(
 
     # device planning: the chunk-built T-CSR (and, under protocol, the val
     # continuation index) is exported/staged once; epochs reuse it
-    tcsr_tr = _stage_tcsr(index) if plan == "device" else None
+    tcsr_tr = _stage_tcsr(index, cfg.n_layers) \
+        if plan == "device" else None
     val_index, tcsr_val = None, None
     if plan == "device" and protocol:
         val_index = ChronoNeighborIndex(
             splits.val.src, splits.val.dst, splits.val.t, splits.val.eidx,
             shards.num_nodes, cfg.num_neighbors, cfg.batch_size,
             history=train_hist)
-        tcsr_val = _stage_tcsr(val_index)
+        tcsr_val = _stage_tcsr(val_index, cfg.n_layers)
 
     own_tmp = None
     if protocol and ckpt_dir is None:
@@ -425,7 +429,7 @@ def train_single(
         tr_index = ChronoNeighborIndex(
             tr_stream.src, tr_stream.dst, tr_stream.t, tr_stream.eidx,
             g.num_nodes, cfg.num_neighbors, cfg.batch_size)
-        tcsr["train"] = _stage_tcsr(tr_index)
+        tcsr["train"] = _stage_tcsr(tr_index, cfg.n_layers)
     idx = {}
 
     # double-buffered host planning: epoch e+1's train plan is built and
@@ -454,7 +458,7 @@ def train_single(
                     val_stream.src, val_stream.dst, val_stream.t,
                     val_stream.eidx, g.num_nodes, cfg.num_neighbors,
                     cfg.batch_size, history=hist)
-                tcsr["val"] = _stage_tcsr(idx["val"])
+                tcsr["val"] = _stage_tcsr(idx["val"], cfg.n_layers)
             val_batches, hist_val = build_batch_program(
                 val_stream, cfg, epoch_rng(seed, ep, 2),
                 history=None if plan == "device" else hist,
@@ -467,7 +471,7 @@ def train_single(
                         test_stream.src, test_stream.dst, test_stream.t,
                         test_stream.eidx, g.num_nodes, cfg.num_neighbors,
                         cfg.batch_size, history=hist_val)
-                    tcsr["test"] = _stage_tcsr(idx["test"])
+                    tcsr["test"] = _stage_tcsr(idx["test"], cfg.n_layers)
                 test_batches, _ = build_batch_program(
                     test_stream, cfg, epoch_rng(seed, ep, 3),
                     history=None if plan == "device" else hist_val,

@@ -1,0 +1,378 @@
+"""Multi-layer temporal attention + MXU lane-padding tests (PR 7).
+
+Four layers of guarantees:
+
+(1) the stacked ``lax.scan`` attention fold at L == 1 is bit-identical to
+    the direct single-layer module, and compiles ONE layer block (the
+    dot_general count in the jaxpr is independent of L);
+(2) the ops-boundary lane padding (``kernels/ops.py``) is value-invariant:
+    padded interpret-mode kernel launches match the UNPADDED ``ref.py``
+    oracles at 1e-5, forward and backward, on deliberately odd dims;
+(3) windowed temporal-neighbor sampling (the per-layer K-windows of the
+    multi-layer fold) agrees between the host index, the jnp oracle and
+    the Pallas kernel body;
+(4) end to end: ``n_layers=2`` trains under ``plan="device"`` in
+    train_single / pac_train bit-identically to ``plan="host"``, and
+    train_sharded runs it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.neighbor_sample import neighbor_sample_fwd
+from repro.tig.data import synthetic_tig
+from repro.tig.models import TIGConfig
+from repro.tig.modules import (attn_init, stacked_attn_init,
+                               stacked_temporal_attention,
+                               temporal_attention)
+from repro.tig.sampler import ChronoNeighborIndex
+from repro.tig.train import train_single
+
+CFG2 = TIGConfig(dim=16, dim_time=8, dim_edge=16, dim_node=16,
+                 num_neighbors=4, batch_size=128, n_layers=2)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+# ------------------------------------------------ stacked fold == direct
+
+
+def _attn_inputs(key, b=32, k=5, d=16, d_extra=12, d_kv=24):
+    ks = jax.random.split(key, 5)
+    h0 = rand(ks[0], (b, d))
+    extra = rand(ks[1], (b, d_extra))
+    kv = rand(ks[2], (b, k, d_kv))
+    mask = jax.random.bernoulli(ks[3], 0.7, (b, k))
+    mask = mask.at[0].set(False)            # a zero-neighbor row
+    p = attn_init(ks[4], d + d_extra, d_kv, d, n_heads=2)
+    return p, h0, extra, kv, mask
+
+
+def test_stacked_scan_l1_matches_direct():
+    """Same math, two lowerings: the scanned fold compiles its body as one
+    XLA program while the direct path runs op-by-op, so cross-lowering
+    bitwise identity is not guaranteed — 1e-6 is (f32 rounding only).
+    The MODEL keeps the direct code path for n_layers == 1 (models.py), so
+    production n_layers=1 results are bit-identical by construction."""
+    p, h0, extra, kv, mask = _attn_inputs(jax.random.PRNGKey(0))
+    p_stack = jax.tree.map(lambda x: x[None], p)
+    got = stacked_temporal_attention(p_stack, h0, extra, kv[None],
+                                     mask[None], n_heads=2)
+    want = temporal_attention(p, jnp.concatenate([h0, extra], axis=-1),
+                              kv, mask, n_heads=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+def _count_dot_general(jaxpr) -> int:
+    """Recursively count dot_general eqns — scan bodies count ONCE."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "dot_general":
+            n += 1
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                n += _count_dot_general(sub)
+    return n
+
+
+def _sub_jaxprs(v):
+    if hasattr(v, "eqns"):                  # Jaxpr
+        yield v
+    elif hasattr(v, "jaxpr"):               # ClosedJaxpr
+        yield v.jaxpr
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+def test_stacked_fold_compiles_one_layer_block():
+    """The jaxpr dot_general count must NOT grow with n_layers — the scan
+    traces its layer body once (no L-unrolled graph)."""
+    key = jax.random.PRNGKey(1)
+    counts = {}
+    for n_layers in (2, 3):
+        _, h0, extra, kv1, mask1 = _attn_inputs(key)
+        p_stack = stacked_attn_init(jax.random.PRNGKey(2), n_layers,
+                                    h0.shape[1] + extra.shape[1],
+                                    kv1.shape[-1], h0.shape[1], 2)
+        kv = jnp.broadcast_to(kv1[None], (n_layers,) + kv1.shape)
+        mask = jnp.broadcast_to(mask1[None], (n_layers,) + mask1.shape)
+
+        def fwd(p, kv=kv, mask=mask, h0=h0, extra=extra):
+            return stacked_temporal_attention(p, h0, extra, kv, mask,
+                                              n_heads=2).sum()
+
+        counts[n_layers] = (
+            _count_dot_general(jax.make_jaxpr(fwd)(p_stack).jaxpr),
+            _count_dot_general(jax.make_jaxpr(jax.grad(fwd))(p_stack).jaxpr),
+        )
+    assert counts[2] == counts[3], counts
+    assert counts[2][0] > 0
+
+
+def test_stacked_l2_refines_not_repeats():
+    """With 2 distinct layers the fold must differ from either single layer
+    applied alone (the carry actually threads through)."""
+    p, h0, extra, kv, mask = _attn_inputs(jax.random.PRNGKey(3))
+    p_stack = stacked_attn_init(jax.random.PRNGKey(4), 2,
+                                h0.shape[1] + extra.shape[1],
+                                kv.shape[-1], h0.shape[1], 2)
+    kv2 = jnp.stack([kv, kv])
+    mask2 = jnp.stack([mask, mask])
+    out = stacked_temporal_attention(p_stack, h0, extra, kv2, mask2,
+                                     n_heads=2)
+    for l in range(2):
+        p_l = jax.tree.map(lambda x, l=l: x[l], p_stack)
+        single = temporal_attention(p_l, jnp.concatenate([h0, extra], -1),
+                                    kv, mask, n_heads=2)
+        assert not np.allclose(np.asarray(out), np.asarray(single))
+    # and it equals the hand-unrolled 2-step fold
+    p0 = jax.tree.map(lambda x: x[0], p_stack)
+    p1 = jax.tree.map(lambda x: x[1], p_stack)
+    h1 = temporal_attention(p0, jnp.concatenate([h0, extra], -1), kv, mask,
+                            n_heads=2)
+    h2 = temporal_attention(p1, jnp.concatenate([h1, extra], -1), kv, mask,
+                            n_heads=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h2),
+                               atol=1e-6, rtol=1e-5)
+
+
+# ------------------------------------ lane padding is value-invariant
+
+
+def test_padded_gru_matches_unpadded_ref():
+    """Odd dims force real padding (20 -> 128, 24 -> 128); the interpret
+    launch must match the raw oracle fwd + bwd at 1e-5."""
+    b, d_in, d_h = 16, 20, 24
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    args = (rand(ks[0], (b, d_in)), rand(ks[1], (b, d_h)),
+            rand(ks[2], (d_in, 3 * d_h), 0.3),
+            rand(ks[3], (d_h, 3 * d_h), 0.3),
+            rand(ks[4], (3 * d_h,), 0.1), rand(ks[5], (3 * d_h,), 0.1))
+
+    got = ops.gru(*args, backend="interpret")
+    want = ref.gru_ref(*args)
+    assert got.shape == want.shape == (b, d_h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+    g_pad = jax.grad(lambda *a: ops.gru(*a, backend="interpret").sum(),
+                     argnums=tuple(range(6)))(*args)
+    g_ref = jax.grad(lambda *a: ref.gru_ref(*a).sum(),
+                     argnums=tuple(range(6)))(*args)
+    for gp, gr in zip(g_pad, g_ref):
+        assert gp.shape == gr.shape
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gr),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_padded_attention_matches_unpadded_ref():
+    """D=12 -> 128 lanes and K=5 -> 8 sublanes; padded slots are masked,
+    q is pre-scaled so the 1/sqrt(D) normalization is preserved."""
+    b, k, h, d = 16, 5, 2, 12
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    q = rand(ks[0], (b, h, d))
+    kk = rand(ks[1], (b, k, h, d))
+    vv = rand(ks[2], (b, k, h, d))
+    mask = jax.random.bernoulli(ks[3], 0.7, (b, k))
+    mask = mask.at[0].set(False)
+
+    got = ops.temporal_attention(q, kk, vv, mask, backend="interpret")
+    want = ref.temporal_attention_ref(q, kk, vv, mask)
+    assert got.shape == want.shape == (b, h, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[0]), 0.0)
+
+    def loss_pad(q, kk, vv):
+        return ops.temporal_attention(q, kk, vv, mask,
+                                      backend="interpret").sum()
+
+    def loss_ref(q, kk, vv):
+        return ref.temporal_attention_ref(q, kk, vv, mask).sum()
+
+    g_pad = jax.grad(loss_pad, argnums=(0, 1, 2))(q, kk, vv)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, kk, vv)
+    for gp, gr in zip(g_pad, g_ref):
+        assert gp.shape == gr.shape
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gr),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_padded_flush_matches_unpadded_ref():
+    """d_msg=20 -> 128 (msg cols + wx rows only; the aliased memory table
+    keeps its raw width)."""
+    n, rows, dm, d = 12, 10, 20, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 8)
+    ids = jax.random.randint(ks[0], (rows,), 0, n + 1).astype(jnp.int32)
+    args = (ids, rand(ks[1], (rows, dm)),
+            jax.random.uniform(ks[2], (rows,)) * 5.0,
+            rand(ks[3], (n + 1, d)), jax.random.uniform(ks[4], (n + 1,)),
+            rand(ks[5], (dm, 3 * d), 0.3), rand(ks[6], (d, 3 * d), 0.3),
+            rand(ks[7], (3 * d,), 0.1), jnp.zeros((3 * d,)))
+
+    got = ops.fused_flush(*args, backend="interpret")
+    want = ref.flush_ref(*args)
+    for a, b_, name in zip(got, want, ("mem", "last", "mbar")):
+        assert a.shape == b_.shape, name
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+
+    def loss(backend, msg, mem, wx):
+        a = (ids, msg, args[2], mem, args[4], wx) + args[6:]
+        mem2, last2, mbar = ops.fused_flush(*a, backend=backend)
+        return mem2.sum() + mbar.sum()
+
+    g_pad = jax.grad(lambda *a: loss("interpret", *a),
+                     argnums=(0, 1, 2))(args[1], args[3], args[5])
+    g_ref = jax.grad(lambda *a: loss("xla", *a),
+                     argnums=(0, 1, 2))(args[1], args[3], args[5])
+    for gp, gr in zip(g_pad, g_ref):
+        assert gp.shape == gr.shape
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gr),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_lane_pad_helpers_agree():
+    from repro.roofline.kernel_bytes import lane_pad, sublane_pad
+    for n in (1, 16, 127, 128, 129, 384):
+        assert ops.lane_pad(n) == lane_pad(n)
+        assert lane_pad(n) % 128 == 0 and lane_pad(n) >= n
+        assert sublane_pad(n) % 8 == 0 and sublane_pad(n) >= n
+    assert lane_pad(128) == 128 and sublane_pad(16) == 16   # aligned: no-op
+
+
+# ----------------------------------------- windowed neighbor sampling
+
+
+def _crafted_index(k=3, batch_size=2):
+    src = np.array([2, 2, 2, 2, 2, 1, 3, 0, 2, 2])
+    dst = np.array([3, 4, 5, 6, 4, 2, 2, 2, 5, 6])
+    t = np.arange(1.0, 11.0)
+    return ChronoNeighborIndex(src, dst, t, np.arange(len(src)), 8, k,
+                               batch_size)
+
+
+def test_windowed_sampling_host_oracle_kernel_agree():
+    index = _crafted_index()
+    depth = 3
+    tcsr = {k: jnp.asarray(v)
+            for k, v in index.device_export(depth=depth).items()}
+    nodes = np.array([0, 1, 2, 3, 4, 5, 6, 7, 2, 2])
+    for b in range(index.num_batches):
+        for w in range(depth):
+            hb, ht, he = index.sample(nodes.astype(np.int64),
+                                      np.full(len(nodes), b), window=w)
+            nj = jnp.asarray(nodes, jnp.int32)
+            bj = jnp.full((len(nodes),), b, jnp.int32)
+            for label, (db, dt, de) in {
+                "oracle": ref.sample_ref(
+                    tcsr["indptr"], tcsr["nbr"], tcsr["t"], tcsr["eidx"],
+                    tcsr["bat"], nj, bj, index.k, w),
+                "kernel": neighbor_sample_fwd(
+                    tcsr["indptr"], tcsr["nbr"], tcsr["t"], tcsr["eidx"],
+                    tcsr["bat"], nj, bj, k=index.k, interpret=True,
+                    window=w),
+                "ops": ops.neighbor_sample(
+                    tcsr, nj, bj, index.k, backend="xla",
+                    window=jnp.full((len(nodes),), w, jnp.int32)),
+            }.items():
+                msg = f"batch={b} window={w} {label}"
+                np.testing.assert_array_equal(np.asarray(db), hb,
+                                              err_msg=msg)
+                np.testing.assert_array_equal(
+                    np.asarray(dt), ht.astype(np.float32), err_msg=msg)
+                np.testing.assert_array_equal(np.asarray(de), he,
+                                              err_msg=msg)
+
+
+def test_window_zero_is_default_path():
+    index = _crafted_index()
+    tcsr = {k: jnp.asarray(v) for k, v in index.device_export().items()}
+    nodes = jnp.arange(8, dtype=jnp.int32)
+    a = ref.sample_ref(tcsr["indptr"], tcsr["nbr"], tcsr["t"],
+                       tcsr["eidx"], tcsr["bat"], nodes, jnp.int32(1),
+                       index.k)
+    bwin = ref.sample_ref(tcsr["indptr"], tcsr["nbr"], tcsr["t"],
+                          tcsr["eidx"], tcsr["bat"], nodes, jnp.int32(1),
+                          index.k, 0)
+    for x, y in zip(a, bwin):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_older_windows_are_older_events():
+    """Window w+1's events all precede window w's (per node, where both
+    are non-empty) — the fold's deeper layers look further back."""
+    index = _crafted_index()
+    nodes = np.full(4, 2, dtype=np.int64)       # the hub node
+    bo = np.full(4, index.num_batches - 1)
+    _, t0, _ = index.sample(nodes, bo, window=0)
+    _, t1, _ = index.sample(nodes, bo, window=1)
+    real0, real1 = t0[t0 >= 0], t1[t1 >= 0]
+    assert len(real0) and len(real1)
+    assert real1.max() < real0.min()
+
+
+# --------------------------------------------------- end-to-end parity
+
+
+def _tree_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+def test_train_single_two_layers_device_plan_bit_identical():
+    g = synthetic_tig("tiny", seed=3)
+    a = train_single(g, CFG2, epochs=2, seed=0, plan="host")
+    b = train_single(g, CFG2, epochs=2, seed=0, plan="device")
+    assert a.losses == b.losses
+    assert a.val_ap == b.val_ap and a.test_ap == b.test_ap
+    _tree_equal(a.params, b.params)
+    _tree_equal(a.state, b.state)
+    assert all(np.isfinite(l) for l in a.losses)
+
+
+def test_train_single_two_layers_differs_from_one_layer():
+    """n_layers must actually change the computation."""
+    g = synthetic_tig("tiny", seed=3)
+    import dataclasses
+    one = train_single(g, dataclasses.replace(CFG2, n_layers=1),
+                       epochs=1, seed=0)
+    two = train_single(g, CFG2, epochs=1, seed=0)
+    assert one.losses != two.losses
+
+
+def test_pac_train_two_layers_device_plan_bit_identical():
+    from repro.core import sep_partition
+    from repro.tig.distributed import pac_train
+    from repro.tig.graph import chronological_split
+
+    cfg = TIGConfig(flavor="tgn", dim=16, dim_time=8, dim_edge=16,
+                    dim_node=16, num_neighbors=4, batch_size=50,
+                    n_layers=2)
+    g = synthetic_tig("tiny", seed=0)
+    train_g, _, _, _ = chronological_split(g)
+    part = sep_partition(train_g.src, train_g.dst, train_g.t,
+                         g.num_nodes, 4, k=0.05)
+    kw = dict(num_devices=4, epochs=2, lr=2e-3, shuffle_parts=False)
+    a = pac_train(train_g, part, cfg, plan="host", **kw)
+    b = pac_train(train_g, part, cfg, plan="device", **kw)
+    for la, lb in zip(a.losses, b.losses):
+        np.testing.assert_array_equal(la, lb)
+    _tree_equal(a.params, b.params)
+    _tree_equal(a.memory_states, b.memory_states)
+
+
+def test_train_sharded_two_layers_smoke(tmp_path):
+    from repro.tig.stream import write_graph_shards
+    from repro.tig.train import train_sharded
+
+    g = synthetic_tig("tiny", seed=3)
+    sh = write_graph_shards(g, str(tmp_path / "sh"), shard_edges=313)
+    res = train_sharded(sh, CFG2, epochs=1, seed=0, plan="device")
+    assert all(np.isfinite(l) for l in res.losses)
