@@ -1,0 +1,132 @@
+"""Multi-host PAC staging benchmark: per-host grid + T-CSR bytes,
+replicated flat layout vs row-range sharded (PR 8).
+
+The replicated layout (the single-host oracle) ships EVERY device the
+full flat batch grid and the concatenated T-CSR event buffer, so a host
+with ``n_local`` devices stages the full plan once and transfers it
+``n_local`` times over H2D.  The row-range-sharded layout cuts the same
+plan by per-device rows: ``plan_epoch(layout="sharded", local_ranks=...)``
+materializes ONLY the host's own devices' rows (host bytes) and each
+device receives only its own (padded) row range (H2D bytes).
+
+The simulated pod is deliberately imbalanced twice over: 8 SEP
+partitions are combined unevenly onto 4 devices (3/2/2/1 parts each, so
+per-device row counts differ), and the devices are split 3-vs-1 across 2
+simulated hosts — the shape where the replicated layout hurts most,
+because the 3-device host pays the full flat plan three times.  Per host
+the module measures staged bytes (what planning must hold in RAM) and
+H2D bytes (what the epoch transfers to that host's devices), asserting:
+
+  * each local-ranks plan is bit-identical to its rows of the full
+    sharded plan (every host derives the same global layout),
+  * the sharded layout stages strictly fewer host bytes,
+  * per-host H2D drops >= 2x (CI runs this module),
+  * the measured reduction matches the analytic
+    ``roofline.kernel_bytes.pac_staging_bytes`` model.
+
+The layouts' training parity (exact equality of losses/params/memory/
+metrics across >= 2 epochs with shuffle-combine resyncs, plus the
+2-process CPU cluster) is covered by ``tests/test_pac_multihost.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+
+PART_GROUPS = ([0, 1, 2], [3, 4], [5, 6], [7])  # 8 SEP parts -> 4 devices
+HOSTS = ([0, 1, 2], [3])                        # 2 hosts, 3-vs-1 devices
+
+
+def run(fast: bool = True):
+    from repro.core import sep_partition
+    from repro.roofline.kernel_bytes import pac_staging_bytes
+    from repro.tig.data import synthetic_tig
+    from repro.tig.distributed import plan_epoch
+    from repro.tig.models import TIGConfig
+    from repro.tig.train import time_scale_of
+
+    name = "wikipedia-s" if fast else "ml25m-s"
+    g = synthetic_tig(name, seed=0)
+    cfg = TIGConfig(flavor="tgn", dim=32, dim_time=16, dim_edge=g.dim_edge,
+                    dim_node=g.dim_node, num_neighbors=5, batch_size=100)
+    part = sep_partition(g.src, g.dst, g.t, g.num_nodes,
+                         len(PART_GROUPS) * 2, k=0.05)
+    small = part.node_lists()
+    node_lists = [np.unique(np.concatenate([small[i] for i in grp]))
+                  for grp in PART_GROUPS]
+    scale = time_scale_of(g.t)
+
+    def plan(**kw):
+        return plan_epoch(g, node_lists, part.shared_nodes, cfg,
+                          np.random.default_rng(0), time_scale=scale,
+                          plan="device", **kw)
+
+    full_rep = plan(layout="replicated")
+    full_sh = plan(layout="sharded")
+    n_dev = len(node_lists)
+    print(f"{name}: per-device batches {full_sh.n_batches.tolist()} "
+          f"(rows_cap pads to {int(full_sh.n_batches.max())})")
+
+    rows = []
+    for h, ranks in enumerate(HOSTS):
+        local = plan(layout="sharded", local_ranks=ranks)
+        # the local-ranks plan must be bit-identical to its rows of the
+        # full sharded plan (every host derives the same global layout)
+        for key in full_sh.batches:
+            np.testing.assert_array_equal(
+                local.batches[key], full_sh.batches[key][ranks])
+        for key in full_sh.tcsr:
+            np.testing.assert_array_equal(
+                local.tcsr[key], full_sh.tcsr[key][ranks])
+
+        n_local = len(ranks)
+        rep_staged = full_rep.plan_bytes()              # full flat plan
+        rep_h2d = n_local * full_rep.device_input_bytes()
+        sh_staged = local.plan_bytes()                  # own rows only
+        sh_h2d = sh_staged      # each device receives exactly its rows
+        staged_ratio = rep_staged / sh_staged
+        h2d_ratio = rep_h2d / sh_h2d
+        rows.append({
+            "host": h,
+            "n_local": n_local,
+            "dataset": name,
+            "replicated_staged_mb": rep_staged / 1e6,
+            "sharded_staged_mb": sh_staged / 1e6,
+            "replicated_h2d_mb": rep_h2d / 1e6,
+            "sharded_h2d_mb": sh_h2d / 1e6,
+            "staged_reduction": staged_ratio,
+            "h2d_reduction": h2d_ratio,
+        })
+        print(f"host {h} ({n_local} dev): staged {rep_staged/1e6:.2f} -> "
+              f"{sh_staged/1e6:.2f} MB ({staged_ratio:.2f}x), "
+              f"H2D {rep_h2d/1e6:.2f} -> {sh_h2d/1e6:.2f} MB "
+              f"({h2d_ratio:.2f}x)")
+        assert sh_staged < rep_staged, (
+            f"host {h}: sharded staging must be strictly below replicated")
+        assert h2d_ratio >= 2.0, (
+            f"host {h}: sharded layout must cut per-host H2D >= 2x, "
+            f"got {h2d_ratio:.2f}x")
+
+    # analytic cross-check: the roofline staging model, fed the plan's
+    # actual row/event counts and per-row bytes, must reproduce the
+    # measured per-device reduction (indptr bytes are the only unmodeled
+    # term)
+    row_bytes = full_rep.grid_bytes() / int(full_rep.n_batches.sum())
+    events = (2 * full_sh.edges_per_device
+              + cfg.num_neighbors * cfg.n_layers)
+    model = pac_staging_bytes(full_sh.n_batches, events,
+                              row_bytes=row_bytes, n_hosts=len(HOSTS))
+    got = full_rep.plan_bytes() / (full_sh.plan_bytes() / n_dev)
+    want = (model["per_device_replicated"] / model["per_device_sharded"])
+    assert abs(got - want) / want < 0.15, (got, want)
+    for row in rows:
+        row["model_h2d_reduction"] = want
+
+    emit("pac_multihost", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,7 @@ MODULES = [
     "kernel_backward",
     "ingest_prefetch",
     "pac_plan",
+    "pac_multihost",
     "device_sampling",
     "protocol_sharded",
     "table3_efficiency",

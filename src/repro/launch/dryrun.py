@@ -273,7 +273,14 @@ def dryrun_speed_tig(*, multi_pod: bool, save: bool = True,
     """Dry-run the PAC shard_map epoch program on a pod-scale 'part' mesh:
     256 (or 512) sub-graph partitions, one per chip — DGraphFin-scale node
     memory sharded per device (the paper's space-overhead story at pod
-    scale)."""
+    scale).
+
+    The lowered layout is the row-range-SHARDED data plane (PR 8): the
+    (n_parts, steps, batch) raw-record grid AND the per-device T-CSR
+    events are partitioned over "part" — after compilation the per-device
+    input shards are asserted to be exactly ``1/n_parts`` of the global
+    grid/event rows (each chip receives only its own rows; the replicated
+    flat layout would ship every chip the full buffer)."""
     from repro.configs.speed_tig import TIG
     from repro.optim import adamw as _adamw
     from repro.tig.distributed import make_pac_epoch
@@ -291,14 +298,15 @@ def dryrun_speed_tig(*, multi_pod: bool, save: bool = True,
     i32, f32, b_ = jnp.int32, jnp.float32, jnp.bool_
     n_edges = 4_300_999
     e_cap = n_edges // n_parts + n_parts  # balanced partitions (SEP)
+    # per-device T-CSR export: 2 endpoint events per edge + K*depth pad
+    ev_cap = 2 * e_cap + k * cfg.n_layers
 
     def batch_tree():
-        # host_replay layout: per-chip (steps, ...) grids sharded over the
-        # mesh.  With balanced SEP partitions the transfer-minimal flat
-        # grid would be the same rows REPLICATED on every chip (it is
-        # unsharded until the ROADMAP row-range sharding lands), so the
-        # sharded replay placement is what a pod actually wants here.
-        per = {
+        # device plan + sharded layout: per-chip (steps, ...) RAW edge
+        # records, row-range sharded over "part" (each chip's rows live on
+        # that chip only); neighbor grids are sampled on device from the
+        # per-device T-CSR below.
+        return {
             "src": sds((n_parts, steps, b), i32),
             "dst": sds((n_parts, steps, b), i32),
             "neg": sds((n_parts, steps, b), i32),
@@ -306,11 +314,14 @@ def dryrun_speed_tig(*, multi_pod: bool, save: bool = True,
             "eidx": sds((n_parts, steps, b), i32),
             "valid": sds((n_parts, steps, b), b_),
         }
-        for role in ("src", "dst", "neg"):
-            per[f"nbr_{role}"] = sds((n_parts, steps, b, k), i32)
-            per[f"nbrt_{role}"] = sds((n_parts, steps, b, k), f32)
-            per[f"nbre_{role}"] = sds((n_parts, steps, b, k), i32)
-        return per
+
+    def tcsr_events():
+        return {
+            "nbr": sds((n_parts, ev_cap), i32),
+            "t": sds((n_parts, ev_cap), f32),
+            "eidx": sds((n_parts, ev_cap), i32),
+            "bat": sds((n_parts, ev_cap), i32),
+        }
 
     opt = _adamw(lr=1e-4, max_grad_norm=1.0)
     params_shape = jax.eval_shape(
@@ -319,31 +330,51 @@ def dryrun_speed_tig(*, multi_pod: bool, save: bool = True,
     n_shared = int(0.01 * 4_889_537)   # top_k=1% hubs shared
 
     epoch_fn = make_pac_epoch(cfg, opt, steps, capacity, mesh=mesh,
-                              host_replay=True)
+                              device_plan=True, grid_layout="sharded")
     t0 = time.time()
     lowered = epoch_fn.lower(
         params_shape, opt_shape, batch_tree(),
-        sds((n_parts,), i32),            # per-device flat-grid offsets
+        sds((n_parts,), i32),            # per-device grid offsets (all 0)
         sds((n_parts,), i32),            # per-device real batch counts
         sds((n_parts, capacity + 1, cfg.dim_node), f32),
         sds((n_parts, e_cap + 1, cfg.dim_edge), f32),
         sds((n_parts, n_shared), i32),
+        sds((n_parts, capacity + 1), i32),   # T-CSR indptr (unoffset)
+        tcsr_events(),
     )
     compiled = lowered.compile()
     elapsed = time.time() - t0
+
+    # the sharded-grid contract: each chip's input shard holds ONE row of
+    # the grid and of the event buffer — 1/n_parts of the global rows
+    args_sh = compiled.input_shardings[0]
+    grid_shard = args_sh[2]["src"].shard_shape((n_parts, steps, b))
+    ev_shard = args_sh[9]["nbr"].shard_shape((n_parts, ev_cap))
+    assert grid_shard == (1, steps, b), grid_shard
+    assert ev_shard == (1, ev_cap), ev_shard
+    shrink = n_parts * steps * b // (grid_shard[0] * steps * b)
+    assert shrink == n_parts, (shrink, n_parts)
+
     report = analyze_compiled(
         compiled, arch="speed-tig", shape="pac_epoch",
         mesh_name=mesh_name, chips=n_parts,
         model_flops=0.0,
-        note=f"PAC epoch: {steps} lockstep steps, batch {b}, "
-             f"capacity {capacity} nodes/device, {n_shared} shared nodes")
+        note=f"PAC epoch (sharded grid + T-CSR): {steps} lockstep steps, "
+             f"batch {b}, capacity {capacity} nodes/device, "
+             f"{n_shared} shared nodes")
     out = report.to_json()
     out["status"] = "ok"
     out["compile_seconds"] = elapsed
     out["memory_analysis"] = str(compiled.memory_analysis())
+    out["grid_layout"] = "sharded"
+    out["per_device_grid_rows"] = int(grid_shard[0] * steps)
+    out["per_device_event_rows"] = int(ev_shard[0] * ev_cap)
+    out["input_shrink_factor"] = int(shrink)
     if verbose:
         print(f"[speed-tig PAC x {mesh_name}] compiled in {elapsed:.1f}s")
         print("  memory:", compiled.memory_analysis())
+        print(f"  sharded inputs: grid shard {grid_shard}, events "
+              f"{ev_shard} -> {shrink}x smaller than replicated")
         print(f"  terms: compute={report.compute_s*1e3:.3f}ms "
               f"memory={report.memory_s*1e3:.3f}ms "
               f"collective={report.collective_s*1e3:.3f}ms")

@@ -8,9 +8,12 @@ Hardware constants for the roofline (v5e): see ``repro.roofline.analysis``.
 
 from __future__ import annotations
 
-import jax
+from typing import Optional
 
-__all__ = ["make_production_mesh", "make_tig_mesh"]
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_tig_mesh", "local_part_ranks"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,9 +24,43 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_tig_mesh(num_parts: int):
-    """PAC mesh: one axis, one sub-graph partition per device (paper §II-C).
+def make_tig_mesh(num_parts: Optional[int] = None):
+    """PAC mesh: one process-spanning "part" axis, one sub-graph partition
+    per device (paper §II-C); defaults to every device of the cluster
+    (``jax.process_count() * local_device_count``).
+
+    Devices are ordered by ``(process_index, id)`` so each host's local
+    devices form a CONTIGUOUS row range of the axis — the contract the
+    row-range-sharded PAC plan relies on: ``plan_epoch(local_ranks=...)``
+    materializes only those rows per host and
+    ``stream.stage_partitioned`` places them with
+    ``make_array_from_process_local_data``, which maps local shards to
+    local devices in exactly this order.
 
     On the production pod a TIG deployment uses all chips of one pod as
     partitions (the memory module shards |V|/256 per chip)."""
-    return jax.make_mesh((num_parts,), ("part",))
+    devices = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    if num_parts is None:
+        num_parts = len(devices)
+    return jax.sharding.Mesh(np.asarray(devices[:num_parts]), ("part",))
+
+
+def local_part_ranks(mesh) -> np.ndarray:
+    """Ranks on the mesh's "part" axis owned by THIS process.
+
+    The row-range-sharded PAC data plane requires them to be contiguous
+    (one slice of the flat grid per host) — build the mesh with
+    ``make_tig_mesh`` to guarantee that ordering."""
+    flat = list(np.asarray(mesh.devices).flat)
+    pi = jax.process_index()
+    ranks = np.array([i for i, d in enumerate(flat)
+                      if d.process_index == pi], dtype=np.int64)
+    if ranks.size == 0:
+        raise ValueError(
+            f"process {pi} owns no device on the 'part' axis of {mesh}")
+    if not np.array_equal(ranks,
+                          np.arange(ranks[0], ranks[0] + ranks.size)):
+        raise ValueError(
+            "each process's devices must be contiguous on the 'part' axis "
+            "(build the mesh with launch.mesh.make_tig_mesh)")
+    return ranks

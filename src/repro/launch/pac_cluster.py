@@ -1,0 +1,132 @@
+"""Multi-process PAC launcher — one process per host, devices pooled into
+one process-spanning "part" axis.
+
+This is both the reference for launching SPEED's PAC on a pod (one
+invocation per host, a coordinator address they all agree on) and the
+driver the 2-process CPU-cluster parity test spawns in CI.  Every process
+runs the SAME program (standard SPMD): plans only its local devices' rows
+(``pac_train`` detects the multi-process mesh), stages them with
+``make_array_from_process_local_data``, and the Alg.2 shared-node memory
+sync crosses hosts through the mesh collectives.
+
+    # host 0                                       # host 1
+    python -m repro.launch.pac_cluster \\
+        --num-processes 2 --process-id 0 \\          ... --process-id 1 \\
+        --coordinator 10.0.0.1:12321
+
+On CPU the cluster uses the gloo collectives backend and
+``--local-devices`` forces that many host devices per process, which is
+how CI simulates two hosts on one machine.  ``--out`` dumps losses,
+params, merged memories and protocol metrics to an ``.npz`` so runs can
+be compared bit-for-bit across process counts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser(
+        prog="pac_cluster",
+        description="multi-process PAC training driver (one per host)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--coordinator", default="127.0.0.1:12321",
+                    help="host:port every process can reach (process 0 "
+                         "binds it)")
+    ap.add_argument("--local-devices", type=int, default=2,
+                    help="force this many CPU devices per process "
+                         "(0 = leave XLA_FLAGS alone, e.g. real TPUs)")
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--parts", type=int, default=8,
+                    help="SEP partitions; > total devices exercises the "
+                         "shuffle-combine resync every epoch")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grid-layout", default="sharded",
+                    choices=["sharded", "replicated"])
+    ap.add_argument("--sync-mode", default="latest",
+                    choices=["latest", "mean"])
+    ap.add_argument("--out", default="",
+                    help="write losses/params/memory/metrics to this .npz")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse(argv)
+    if args.local_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.local_devices}")
+
+    import jax
+
+    if args.num_processes > 1:
+        try:
+            # CPU collectives span processes through gloo; TPU pods skip
+            # both lines (the default backend already crosses hosts)
+            jax.config.update("jax_cpu_collectives_implementation", "gloo")
+            jax.distributed.initialize(
+                coordinator_address=args.coordinator,
+                num_processes=args.num_processes,
+                process_id=args.process_id)
+        except Exception as e:
+            # the parity test reads this marker to skip gracefully on
+            # platforms that cannot form the cluster (no gloo, sandboxed
+            # sockets, ...) instead of failing the suite
+            print(f"CLUSTER_UNAVAILABLE: {type(e).__name__}: {e}",
+                  flush=True)
+            return 17
+
+    import numpy as np
+
+    from repro.core import sep_partition
+    from repro.launch.mesh import make_tig_mesh
+    from repro.tig.data import synthetic_tig
+    from repro.tig.distributed import pac_train
+    from repro.tig.graph import chronological_split
+    from repro.tig.models import TIGConfig
+
+    g = synthetic_tig("tiny", seed=args.seed)
+    train_g, _, _, _ = chronological_split(g)
+    cfg = TIGConfig(flavor="tgn", dim=16, dim_time=8, dim_edge=16,
+                    dim_node=16, num_neighbors=4, batch_size=50)
+    part = sep_partition(train_g.src, train_g.dst, train_g.t, g.num_nodes,
+                         args.parts, k=0.05)
+    mesh = make_tig_mesh()
+    n_dev = int(mesh.devices.size)
+
+    res = pac_train(
+        train_g, part, cfg, num_devices=n_dev, epochs=args.epochs,
+        seed=args.seed, shuffle_parts=True, sync_mode=args.sync_mode,
+        mesh=mesh, plan="device", grid_layout=args.grid_layout,
+        eval_graph=g)
+
+    if args.out:
+        payload = {}
+        for e, losses in enumerate(res.losses):
+            payload[f"loss_{e}"] = np.asarray(losses)
+        # tree_leaves order is deterministic for a fixed param structure
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(res.params)):
+            payload[f"param_{i}"] = np.asarray(leaf)
+        for key in ("mem", "mem2", "last"):
+            payload[f"state_{key}"] = np.asarray(res.memory_states[key])
+        for key, val in sorted((res.metrics or {}).items()):
+            payload[f"metric_{key}"] = np.asarray(val)
+        np.savez(args.out, **payload)
+
+    print(f"pac_cluster done: process {jax.process_index()}"
+          f"/{jax.process_count()}, devices={n_dev}, "
+          f"grid_layout={args.grid_layout}", flush=True)
+    if args.num_processes > 1:
+        # explicit teardown: the atexit shutdown can race the coordinator
+        # when processes finish at different times (SIGABRT on slow hosts)
+        jax.distributed.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,9 +51,11 @@ def train_tig(args) -> None:
         flavor=args.flavor)
     mesh = None
     if args.shard_map:
-        mesh = jax.make_mesh((args.devices,), ("part",))
+        from repro.launch.mesh import make_tig_mesh
+        mesh = make_tig_mesh(args.devices)
     res = pac_train(train_g, part, cfg, num_devices=args.devices,
-                    epochs=args.epochs, lr=args.lr, mesh=mesh)
+                    epochs=args.epochs, lr=args.lr, mesh=mesh,
+                    grid_layout=args.grid_layout or None)
     print(f"PAC: derived speedup {res.derived_speedup:.2f}x, "
           f"edges/device {res.edges_per_device.tolist()}, "
           f"losses {res.mean_loss_per_epoch().round(4).tolist()}")
@@ -124,6 +126,11 @@ def main(argv=None):
                     choices=["jodie", "dyrep", "tgn", "tige"])
     ap.add_argument("--shard-map", action="store_true",
                     help="use real devices (set XLA_FLAGS for >1 on CPU)")
+    ap.add_argument("--grid-layout", default="",
+                    choices=["", "replicated", "sharded"],
+                    help="PAC batch-grid layout; empty picks the default "
+                         "(sharded on a mesh, replicated on vmap). Multi-"
+                         "host pods should launch repro.launch.pac_cluster")
     # LM options
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=None)

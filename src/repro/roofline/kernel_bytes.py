@@ -39,6 +39,7 @@ import dataclasses
 
 __all__ = ["OpBytes", "gru_bytes", "attn_bytes", "flush_bytes",
            "sample_bytes", "epoch_plan_bytes", "step_pipeline_bytes",
+           "pac_sync_bytes", "pac_staging_bytes",
            "lane_pad", "sublane_pad"]
 
 F32 = 4
@@ -319,6 +320,90 @@ def epoch_plan_bytes(steps, batch, k, num_nodes, total_events, *,
         "device_detail": device,
         "sample": sample_bytes(3 * batch, k, total_events + k,
                                itemsize=itemsize),
+    }
+
+
+# ------------------------------------------------------- PAC pod plumbing
+
+def pac_sync_bytes(n_shared, d_mem, n_devices, n_hosts=1, *,
+                   mode="latest", itemsize=F32) -> dict:
+    """Per-device link bytes of PAC's shared-node memory sync epilogue
+    (``distributed.device_epoch``), with the cross-host (DCN) share.
+
+    ``"latest"`` (the paper's rule) all-gathers only the (S,) last-update
+    timestamps — each device receives the other ``N-1`` replicas' rows —
+    then combines the (S, d) ``mem``/``mem2`` rows with a winner-masked
+    ``psum`` (ring all-reduce: ``2(N-1)/N`` traversals of the tensor per
+    device).  ``"mean"`` psums all three tensors instead.  On a mesh whose
+    "part" axis spans ``n_hosts`` processes with contiguous per-host
+    ranks (``launch.mesh.make_tig_mesh``), ``n_hosts`` of the ring's
+    ``N`` hops cross host boundaries, so that fraction of the traffic
+    rides the data-center network instead of ICI.
+
+    Returns ``{"per_device", "cross_host", "dcn_fraction", "detail"}`` —
+    bytes per device, the slice of them crossing hosts, and the itemized
+    collectives.
+    """
+    assert mode in ("latest", "mean"), mode
+    s, d, n = int(n_shared), int(d_mem), int(n_devices)
+    ring = 2 * (n - 1) / max(n, 1)     # reduce-scatter + all-gather
+    if mode == "latest":
+        detail = {
+            "gather_ts": (n - 1) * s * itemsize,
+            "psum_mem": int(ring * s * d * itemsize),
+            "psum_mem2": int(ring * s * d * itemsize),
+        }
+    else:
+        detail = {
+            "psum_mem": int(ring * s * d * itemsize),
+            "psum_mem2": int(ring * s * d * itemsize),
+            "psum_ts": int(ring * s * itemsize),
+        }
+    per_device = int(sum(detail.values()))
+    dcn_fraction = (n_hosts / n) if (n_hosts > 1 and n > 0) else 0.0
+    return {
+        "per_device": per_device,
+        "cross_host": int(per_device * dcn_fraction),
+        "dcn_fraction": dcn_fraction,
+        "detail": detail,
+    }
+
+
+def pac_staging_bytes(real_batches, events_per_device, row_bytes, *,
+                      event_bytes=3 * I32 + F32, n_hosts=1) -> dict:
+    """Per-host staged H2D bytes of the PAC batch plane: replicated flat
+    grid vs the row-range-sharded layout (``plan_epoch(layout=...)``).
+
+    ``real_batches`` / ``events_per_device`` are per-device row and T-CSR
+    event counts; ``row_bytes`` is one grid row's bytes (one batch).  The
+    replicated layout ships EVERY device the full flat buffer, so a host
+    with ``n_local`` devices stages ``n_local * (sum rows + sum events)``;
+    the sharded layout pads each device to the global caps (a shard_map
+    uniform-block requirement) but ships each device only its OWN rows:
+    ``sum_local (max rows + max events)``.  Devices split contiguously
+    across ``n_hosts`` (the ``make_tig_mesh`` ordering).
+
+    Returns per-host lists plus totals; sharded is strictly below
+    replicated whenever a host has >1 device elsewhere to pay for, i.e.
+    for every multi-device mesh with at least one real batch per device.
+    """
+    rows = [int(r) for r in real_batches]
+    events = [int(e) for e in events_per_device]
+    assert len(rows) == len(events) and rows, (rows, events)
+    flat = sum(rows) * row_bytes + sum(events) * event_bytes
+    rows_cap, ev_cap = max(rows), max(events)
+    per_dev_sharded = rows_cap * row_bytes + ev_cap * event_bytes
+    n_dev, rem = divmod(len(rows), n_hosts)
+    groups = [n_dev + (1 if h < rem else 0) for h in range(n_hosts)]
+    replicated = [int(n_local * flat) for n_local in groups]
+    sharded = [int(n_local * per_dev_sharded) for n_local in groups]
+    return {
+        "replicated": replicated,
+        "sharded": sharded,
+        "total_replicated": int(sum(replicated)),
+        "total_sharded": int(sum(sharded)),
+        "per_device_replicated": int(flat),
+        "per_device_sharded": int(per_dev_sharded),
     }
 
 

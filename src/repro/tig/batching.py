@@ -198,6 +198,32 @@ def concat_batch_programs(
     return flat, offsets
 
 
+def pad_batch_programs(programs: list[dict], rows_cap: int) -> dict:
+    """Stack per-device (rows_k, ...) batch pytrees into one zero-padded
+    (N_held, rows_cap, ...) grid — the row-range-SHARDED PAC layout.
+
+    Companion to ``concat_batch_programs``: instead of one flat replicated
+    grid + offsets, every device owns its OWN leading row — shard_map can
+    then partition the grid over the "part" axis so each host stages and
+    transfers only its local devices' rows.  ``rows_cap`` is the global
+    ``max_k n_batches_k`` (uniform blocks are a shard_map requirement);
+    padding rows are zeros and are never gathered, because the device-side
+    wrap reads row ``s % n_batches_k < rows_cap`` only.
+    """
+    out = {}
+    for key in programs[0]:
+        parts = []
+        for p in programs:
+            v = np.asarray(p[key])
+            if len(v) > rows_cap:
+                raise ValueError(
+                    f"batch program has {len(v)} rows > rows_cap={rows_cap}")
+            pad = [(0, rows_cap - len(v))] + [(0, 0)] * (v.ndim - 1)
+            parts.append(np.pad(v, pad))
+        out[key] = np.stack(parts)
+    return out
+
+
 def build_batches(
     stream: LocalStream,
     cfg: TIGConfig,

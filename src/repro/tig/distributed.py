@@ -42,6 +42,21 @@ The replay layout is kept as the bit-exact parity oracle
 ``ShardedStream`` row-range chunks (one shard of ids+features in host
 memory at a time), so ``pac_train`` runs end-to-end without a materialized
 ``TemporalGraph``.
+
+§Perf C4 — pod-scale row-range sharding.  ``layout="sharded"`` re-cuts the
+same plan by per-device row ranges: the grid becomes a zero-padded
+(N_dev, rows_cap, ...) stack and the T-CSR export stays per-device
+(unoffset ``indptr`` + padded per-device event rows), so ``make_pac_epoch``
+can PARTITION both over the mesh's "part" axis instead of replicating
+them — per-device H2D drops from O(sum all devices) to O(own rows).  On a
+process-spanning mesh (``launch.mesh.make_tig_mesh`` over
+``jax.process_count() * local_device_count`` devices) ``pac_train`` plans
+only the local devices' rows per host (``local_ranks``) and stages them
+with ``make_array_from_process_local_data`` (``stream.stage_partitioned``),
+so HOST grid bytes also stay O(local devices); the Alg.2 shared-node
+memory sync (all_gather/psum over "part") then genuinely spans hosts.
+The replicated flat layout remains the single-host bit-parity oracle
+(``grid_layout="replicated"``).
 """
 
 from __future__ import annotations
@@ -70,6 +85,7 @@ from repro.tig.batching import (
     LocalStream,
     build_batch_program,
     concat_batch_programs,
+    pad_batch_programs,
 )
 from repro.tig.cache import lru_get
 from repro.tig.engine import scan_train_epoch
@@ -77,7 +93,12 @@ from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state
 from repro.tig.protocol import time_scale_of
 from repro.tig.sampler import ChronoNeighborIndex
-from repro.tig.stream import EpochPrefetcher, ShardedStream
+from repro.tig.stream import (
+    EpochPrefetcher,
+    ShardedStream,
+    stage_partitioned,
+    stage_replicated,
+)
 from repro.tig.train import epoch_rng
 
 __all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "pac_train",
@@ -102,12 +123,24 @@ class EpochPlan:
     (the parity oracle) ``batches`` is the legacy (N_dev, steps, ...)
     stack, replayed to the lockstep length on the host, and ``offsets`` is
     ``None``.
+
+    ``layout="sharded"`` (pod scale) re-cuts the flat grid by per-device
+    row ranges: ``batches`` is a zero-padded (N_held, rows_cap, ...) stack
+    (rows_cap = global max n_batches_k, a shard_map uniform-block
+    requirement), ``offsets`` is all-zero, and a device plan's ``tcsr``
+    keeps per-device UNOFFSET ``indptr`` rows plus per-device padded event
+    rows — every array mappable over the "part" axis.  With
+    ``local_ranks`` only those devices' rows are materialized (N_held =
+    len(local_ranks)); the scalar schedule (``n_batches``, ``offsets``,
+    ``steps``, capacities) stays GLOBAL so every process plans the same
+    lockstep epoch.
     """
 
-    batches: dict                 # flat (sum real, ...) or (N_dev, steps, ...)
+    batches: dict                 # flat (sum real, ...) / (N_dev, steps, ...)
+                                  # / sharded (N_held, rows_cap, ...)
     n_batches: np.ndarray         # (N_dev,) real batches per device
-    nfeat_local: np.ndarray       # (N_dev, cap+1, d_n)
-    efeat_local: np.ndarray       # (N_dev, e_cap+1, d_e) — per-device edge
+    nfeat_local: np.ndarray       # (N_held, cap+1, d_n)
+    efeat_local: np.ndarray       # (N_held, e_cap+1, d_e) — per-device edge
                                   # features (§Perf C2: sharded, never the
                                   # full replicated table)
     shared_local: np.ndarray      # (N_dev, S) local rows of shared nodes
@@ -119,7 +152,10 @@ class EpochPlan:
     offsets: Optional[np.ndarray] = None   # (N_dev,) flat-grid start rows
     host_replay: bool = False
     tcsr: Optional[dict] = None   # device plan: {"indptr": (N_dev, cap+1),
-                                  # "nbr"/"t"/"eidx"/"bat": flat events}
+                                  # "nbr"/"t"/"eidx"/"bat": flat events} —
+                                  # or all (N_held, ...) when sharded
+    layout: str = "replicated"    # "replicated" | "sharded"
+    local_ranks: Optional[np.ndarray] = None  # devices materialized here
 
     def grid_bytes(self) -> int:
         """Host bytes of the batch grids (what the epoch must transfer)."""
@@ -136,6 +172,18 @@ class EpochPlan:
         the T-CSR the sampler reads instead of pre-sampled grids."""
         return self.grid_bytes() + self.tcsr_bytes()
 
+    def device_input_bytes(self) -> int:
+        """Grid + T-CSR bytes ONE device receives over H2D.
+
+        Replicated layouts ship the full flat grid (and flat event
+        buffer) to every device; the sharded and host-replay layouts map
+        the leading axis over devices, so each device receives only its
+        own (uniform, padded) row."""
+        if self.layout == "sharded" or self.host_replay:
+            held = len(np.asarray(next(iter(self.batches.values()))))
+            return self.plan_bytes() // max(held, 1)
+        return self.plan_bytes()
+
 
 def _localize_in_memory(
     g: TemporalGraph,
@@ -143,18 +191,30 @@ def _localize_in_memory(
     local,
     cap: int,
     time_scale: float,
+    ranks: list[int],
 ):
     """Per-device localized streams + feature gathers from a materialized
-    ``TemporalGraph`` (the original in-memory path)."""
+    ``TemporalGraph`` (the original in-memory path).
+
+    ``ranks`` selects which devices' streams/features to MATERIALIZE (a
+    host in a multi-process run builds only its own devices' rows; edge
+    COUNTS stay global so the lockstep schedule agrees everywhere).
+    Streams/indexes are ``None`` for unmaterialized devices; feature rows
+    hold ``len(ranks)`` entries in rank order."""
     n_dev = len(node_lists)
-    streams: list[LocalStream] = []
+    held = set(ranks)
+    streams: list[Optional[LocalStream]] = []
     indexes: list[Optional[ChronoNeighborIndex]] = []
     edges_per_device = np.zeros(n_dev, dtype=np.int64)
-    edge_globals: list[np.ndarray] = []
+    edge_globals: dict[int, np.ndarray] = {}
     for k, (nodes, li) in enumerate(zip(node_lists, local)):
         eidx = build_subgraph(g.src, g.dst, nodes, g.num_nodes)
         edges_per_device[k] = len(eidx)
-        edge_globals.append(eidx)
+        if k not in held:
+            streams.append(None)
+            indexes.append(None)
+            continue
+        edge_globals[k] = eidx
         streams.append(
             LocalStream(
                 src=li.to_local[g.src[eidx]].astype(np.int64),
@@ -169,15 +229,17 @@ def _localize_in_memory(
         )
         indexes.append(None)   # build_batch_program's one-shot build
 
-    nfeat_local = np.zeros((n_dev, cap + 1, g.dim_node), np.float32)
-    for k, li in enumerate(local):
+    nfeat_local = np.zeros((len(ranks), cap + 1, g.dim_node), np.float32)
+    for row, k in enumerate(ranks):
+        li = local[k]
         real_ids = li.globals_[: li.num_real]
-        nfeat_local[k, : li.num_real] = g.node_feat[real_ids]
+        nfeat_local[row, : li.num_real] = g.node_feat[real_ids]
 
     e_cap = int(edges_per_device.max()) if n_dev else 0
-    efeat_local = np.zeros((n_dev, e_cap + 1, g.dim_edge), np.float32)
-    for k, eg in enumerate(edge_globals):
-        efeat_local[k, : len(eg)] = g.edge_feat[eg]
+    efeat_local = np.zeros((len(ranks), e_cap + 1, g.dim_edge), np.float32)
+    for row, k in enumerate(ranks):
+        eg = edge_globals[k]
+        efeat_local[row, : len(eg)] = g.edge_feat[eg]
     return streams, indexes, edges_per_device, nfeat_local, efeat_local
 
 
@@ -188,6 +250,7 @@ def _localize_sharded(
     cap: int,
     cfg: TIGConfig,
     time_scale: float,
+    ranks: list[int],
 ):
     """Per-device localized streams + feature gathers straight from
     ``tig-shards-v1`` row-range chunks — the graph is never materialized.
@@ -201,8 +264,15 @@ def _localize_sharded(
     temporal neighbor index is built with the chunked two-pass T-CSR
     (``ChronoNeighborIndex.from_chunks``) over the same localized pieces —
     arrays identical to the one-shot build on the concatenated stream.
+
+    ``ranks`` as in ``_localize_in_memory``: per-device streams, features
+    and indexes materialize only for those devices (the chunk pass still
+    CLASSIFIES every device's edges — the counts drive the global
+    schedule — but unmaterialized devices never accumulate id/feature
+    pieces, keeping the host working set O(local devices)).
     """
     n_dev = len(node_lists)
+    held = set(ranks)
     members = [li.to_local >= 0 for li in local]
     pieces: list[list[tuple]] = [[] for _ in range(n_dev)]
     feat_parts: list[list[np.ndarray]] = [[] for _ in range(n_dev)]
@@ -221,6 +291,8 @@ def _localize_sharded(
             eidx_local = np.arange(cursors[k], cursors[k] + m,
                                    dtype=np.int64)
             cursors[k] += m
+            if k not in held:
+                continue
             pieces[k].append((
                 li.to_local[src[keep]].astype(np.int64),
                 li.to_local[dst[keep]].astype(np.int64),
@@ -229,29 +301,28 @@ def _localize_sharded(
             ))
             feat_parts[k].append(efeat[keep])
 
-    streams: list[LocalStream] = []
-    indexes: list[Optional[ChronoNeighborIndex]] = []
+    streams: list[Optional[LocalStream]] = [None] * n_dev
+    indexes: list[Optional[ChronoNeighborIndex]] = [None] * n_dev
     edges_per_device = cursors.copy()
     e_cap = int(edges_per_device.max()) if n_dev else 0
-    efeat_local = np.zeros((n_dev, e_cap + 1, shards.dim_edge), np.float32)
-    for k in range(n_dev):
+    efeat_local = np.zeros((len(ranks), e_cap + 1, shards.dim_edge),
+                           np.float32)
+    for row, k in enumerate(ranks):
         chunks = pieces[k]
         cat = lambda i: (  # noqa: E731
             np.concatenate([c[i] for c in chunks]) if chunks
             else np.zeros(0, np.int64 if i != 2 else np.float64))
-        streams.append(
-            LocalStream(
-                src=cat(0), dst=cat(1), t=cat(2), eidx=cat(3),
-                num_local_nodes=cap, labels=None,
-            )
+        streams[k] = LocalStream(
+            src=cat(0), dst=cat(1), t=cat(2), eidx=cat(3),
+            num_local_nodes=cap, labels=None,
         )
         # an edge-less device degenerates to one padding batch whose index
         # the one-shot build handles (from_chunks would report 0 batches)
-        indexes.append(ChronoNeighborIndex.from_chunks(
+        indexes[k] = (ChronoNeighborIndex.from_chunks(
             chunks, cap, cfg.num_neighbors, cfg.batch_size)
             if chunks else None)
         if feat_parts[k]:
-            efeat_local[k, : edges_per_device[k]] = \
+            efeat_local[row, : edges_per_device[k]] = \
                 np.concatenate(feat_parts[k])
         # release this device's chunk pieces eagerly: the concatenated
         # stream + T-CSR index own fresh arrays, keeping the originals
@@ -259,12 +330,14 @@ def _localize_sharded(
         feat_parts[k] = []
         pieces[k] = []
 
-    nfeat_local = np.zeros((n_dev, cap + 1, shards.dim_node), np.float32)
+    nfeat_local = np.zeros((len(ranks), cap + 1, shards.dim_node),
+                           np.float32)
     nfeat = shards.node_feat()          # memory-mapped (or zeros)
-    for k, li in enumerate(local):
+    for row, k in enumerate(ranks):
+        li = local[k]
         real_ids = li.globals_[: li.num_real]
-        nfeat_local[k, : li.num_real] = np.asarray(nfeat[real_ids],
-                                                   np.float32)
+        nfeat_local[row, : li.num_real] = np.asarray(nfeat[real_ids],
+                                                     np.float32)
     return streams, indexes, edges_per_device, nfeat_local, efeat_local
 
 
@@ -279,6 +352,8 @@ def plan_epoch(
     time_scale: Optional[float] = None,
     host_replay: bool = False,
     plan: str = "host",
+    layout: str = "replicated",
+    local_ranks=None,
 ) -> EpochPlan:
     """Localize each device's sub-graph and pre-build its batch stream.
 
@@ -299,6 +374,19 @@ def plan_epoch(
     plus unmapped flat ``nbr`` / ``t`` / ``eidx`` / ``bat`` arrays — no
     per-device padding to the largest partition.  ``plan="host"`` (the
     default) is the bit-parity oracle; ``host_replay`` implies it.
+
+    ``layout="sharded"`` (pod scale) cuts the same plan by per-device row
+    ranges instead: the grid is a zero-padded (N_held, rows_cap, ...)
+    stack, the T-CSR stays per-device (unoffset ``indptr``, events padded
+    to the largest export) — both mappable over "part" so each device
+    transfers only its own rows.  ``local_ranks`` (sharded only) limits
+    materialization to this process's devices: batch programs, features
+    and T-CSRs are built for those ranks only, while edge counts and the
+    per-device RNG seeds are drawn for ALL ranks so every process derives
+    the identical global schedule.  Batch-program negatives draw from
+    per-device child seeds (split upfront from ``rng``) — device k's
+    stream is reproducible no matter which subset of devices a host
+    plans.
     """
     if plan not in ("host", "device"):
         raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
@@ -306,9 +394,33 @@ def plan_epoch(
         raise ValueError(
             "host_replay is the host-planned parity oracle; it cannot be "
             "combined with plan='device'")
+    if layout not in ("replicated", "sharded"):
+        raise ValueError(
+            f"layout={layout!r}: expected 'replicated' or 'sharded'")
+    if host_replay and layout == "sharded":
+        raise ValueError(
+            "host_replay IS the legacy replicated-schedule oracle; use "
+            "layout='sharded' without it")
     n_dev = len(node_lists)
+    if local_ranks is not None:
+        if layout != "sharded":
+            raise ValueError(
+                "local_ranks requires layout='sharded' (the replicated "
+                "flat grid needs every device's rows)")
+        ranks = [int(r) for r in np.asarray(local_ranks).ravel()]
+        if ranks != sorted(set(ranks)) or not ranks \
+                or ranks[0] < 0 or ranks[-1] >= n_dev:
+            raise ValueError(f"local_ranks={ranks}: expected sorted unique "
+                             f"ranks within [0, {n_dev})")
+    else:
+        ranks = list(range(n_dev))
     local = make_local_indices(node_lists, source.num_nodes)
     cap = local[0].capacity if local else 0
+
+    # one child seed per device, split upfront: device k's batch stream
+    # (negative draws) is a pure function of (rng, k), independent of
+    # which devices this process materializes
+    seeds = rng.integers(0, 2**63, size=n_dev) if n_dev else []
 
     if isinstance(source, ShardedStream):
         if time_scale is None:
@@ -317,18 +429,20 @@ def plan_epoch(
             time_scale = time_scale_of(source.column("t"))
         streams, indexes, edges_per_device, nfeat_local, efeat_local = \
             _localize_sharded(source, node_lists, local, cap, cfg,
-                              time_scale)
+                              time_scale, ranks)
     else:
         time_scale = time_scale or time_scale_of(source.t)
         streams, indexes, edges_per_device, nfeat_local, efeat_local = \
-            _localize_in_memory(source, node_lists, local, cap, time_scale)
+            _localize_in_memory(source, node_lists, local, cap, time_scale,
+                                ranks)
 
     sched = cycle_schedule(edges_per_device, cfg.batch_size)
     steps = steps_override or sched.steps_per_epoch
 
-    programs = []
-    exports: list[dict] = []
-    for k, stream in enumerate(streams):
+    programs = []                  # aligned with ranks
+    exports: list[dict] = []       # aligned with ranks (device plan)
+    for k in ranks:
+        stream = streams[k]
         idx = indexes[k]
         if plan == "device" and idx is None:
             # the host path defers to build_batch_program's one-shot build;
@@ -340,7 +454,7 @@ def plan_epoch(
         if plan == "device":
             exports.append(idx.device_export(depth=cfg.n_layers))
         real, _ = build_batch_program(
-            stream, cfg, rng,
+            stream, cfg, np.random.default_rng(int(seeds[k])),
             # an empty stream pads to one batch, which the zero-batch
             # index would fail shape validation against
             index=idx if (idx is not None and stream.num_edges) else None,
@@ -349,20 +463,45 @@ def plan_epoch(
         real.pop("labels", None)
         programs.append(real)
 
+    # real batch counts are GLOBAL (the lockstep schedule): recover the
+    # unmaterialized devices' counts from the cycle schedule and check the
+    # built programs agree with it
+    real_batches = np.asarray(sched.batches, dtype=np.int64)
+    for row, k in enumerate(ranks):
+        assert len(programs[row]["src"]) == real_batches[k], \
+            (k, len(programs[row]["src"]), real_batches[k])
+    n_batches = np.minimum(real_batches, steps).astype(np.int32)
+
     tcsr = None
     if plan == "device":
-        lens = [len(e["nbr"]) for e in exports]
-        bases = np.cumsum([0] + lens)[:-1]
-        tcsr = {
-            "indptr": np.stack([e["indptr"] + np.int32(b)
-                                for e, b in zip(exports, bases)]),
-            **{key: np.concatenate([e[key] for e in exports])
-               for key in ("nbr", "t", "eidx", "bat")},
-        }
-
-    real_batches = np.array([len(p["src"]) for p in programs],
-                            dtype=np.int64)
-    n_batches = np.minimum(real_batches, steps).astype(np.int32)
+        if layout == "sharded":
+            # per-device rows, UNOFFSET indptr: each device addresses its
+            # own event segment, padded to the largest export so shard_map
+            # can map the leading axis (pad rows are never addressed —
+            # indptr bounds stay within the real segment)
+            # GLOBAL event cap, derivable from edge counts alone (export
+            # length = 2 endpoint events per edge + K*depth front pad), so
+            # a host planning only its own ranks pads identically
+            ev_cap = int((2 * edges_per_device
+                          + cfg.num_neighbors * cfg.n_layers).max())
+            for k, e in zip(ranks, exports):
+                assert len(e["nbr"]) == 2 * edges_per_device[k] + \
+                    cfg.num_neighbors * cfg.n_layers, (k, len(e["nbr"]))
+            pad = lambda v: np.pad(v, (0, ev_cap - len(v)))  # noqa: E731
+            tcsr = {
+                "indptr": np.stack([e["indptr"] for e in exports]),
+                **{key: np.stack([pad(e[key]) for e in exports])
+                   for key in ("nbr", "t", "eidx", "bat")},
+            }
+        else:
+            lens = [len(e["nbr"]) for e in exports]
+            bases = np.cumsum([0] + lens)[:-1]
+            tcsr = {
+                "indptr": np.stack([e["indptr"] + np.int32(b)
+                                    for e, b in zip(exports, bases)]),
+                **{key: np.concatenate([e[key] for e in exports])
+                   for key in ("nbr", "t", "eidx", "bat")},
+            }
 
     if host_replay:
         # legacy Alg.2 wrap-around ON HOST: replay from the start; the
@@ -374,12 +513,19 @@ def plan_epoch(
                    for kk in per_dev[0]}
         offsets = None
     else:
-        # transfer-minimal: ship ONLY the real batches (trimmed to the
-        # lockstep length when steps_override cuts an epoch short); the
-        # device gathers offsets[k] + s % n_batches[k] inside the scan.
+        # ship ONLY the real batches (trimmed to the lockstep length when
+        # steps_override cuts an epoch short); the device gathers
+        # offsets[k] + s % n_batches[k] inside the scan.
         trimmed = [{kk: v[: n_batches[k]] for kk, v in p.items()}
-                   for k, p in enumerate(programs)]
-        batches, offsets = concat_batch_programs(trimmed)
+                   for k, p in zip(ranks, programs)]
+        if layout == "sharded":
+            # row-range-sharded: every device owns row k of a padded
+            # stack — offsets are all zero and the grid maps over "part"
+            rows_cap = int(n_batches.max()) if n_dev else 0
+            batches = pad_batch_programs(trimmed, rows_cap)
+            offsets = np.zeros(n_dev, np.int32)
+        else:
+            batches, offsets = concat_batch_programs(trimmed)
 
     shared_local = np.zeros((n_dev, len(shared_nodes)), np.int32)
     for k, li in enumerate(local):
@@ -406,6 +552,9 @@ def plan_epoch(
         offsets=offsets,
         host_replay=host_replay,
         tcsr=tcsr,
+        layout=layout,
+        local_ranks=None if local_ranks is None
+        else np.asarray(ranks, np.int64),
     )
 
 
@@ -450,8 +599,11 @@ def device_epoch(
     ``plan_epoch(plan="device")``) the batch grid carries raw edge records
     and the scanned step samples its neighbor grids on device: the
     device's ``indptr`` window addresses its own segment of the shared
-    flat event buffer (the per-device exports are concatenated with
-    offset ``indptr``s, so the events arrive replicated/unmapped).
+    flat event buffer (replicated layout — per-device exports are
+    concatenated with offset ``indptr``s) or, with the row-range-sharded
+    layout, its OWN padded event rows with unoffset ``indptr`` (the
+    executor maps both over the device axis, so either way this function
+    sees one device's ``(cap+1,)`` indptr + the events it may address).
     """
     tables = {"efeat": efeat, "nfeat": nfeat_local}
     fresh = init_state(cfg, capacity)
@@ -512,38 +664,55 @@ def make_pac_epoch(
     sync_mode: Literal["latest", "mean"] = "latest",
     host_replay: bool = False,
     device_plan: bool = False,
+    grid_layout: str = "replicated",
 ):
     """Build the jitted epoch executor.
 
     mesh=None  -> vmap simulation over the leading device axis (single host
                   device; used by CPU tests/benchmarks).
     mesh given -> shard_map over mesh axis "part" (real SPMD; the dry-run
-                  compiles this exact program for the production mesh).
+                  compiles this exact program for the production mesh; the
+                  mesh may SPAN PROCESSES — ``launch.mesh.make_tig_mesh``
+                  — in which case the grid/feature in_specs place each
+                  device's rows on its owning host and the shared-node
+                  sync collectives run across hosts).
 
-    In the default transfer-minimal mode the flat batch grid is UNMAPPED
-    (vmap ``in_axes=None`` / shard_map replicated): every device holds the
-    ``sum_k n_batches_k`` real rows and gathers its own window — still far
-    smaller than a replayed ``N_dev * steps`` grid whenever partitions are
-    imbalanced.  (Sharding the flat grid by row ranges across hosts is the
-    multi-host item on the ROADMAP.)  With ``host_replay`` the legacy
-    per-device replayed grids are mapped over the device axis.
+    ``grid_layout="replicated"`` (the single-host oracle): the flat batch
+    grid is UNMAPPED (vmap ``in_axes=None`` / shard_map replicated) —
+    every device holds the ``sum_k n_batches_k`` real rows and gathers its
+    own window; still far smaller than a replayed ``N_dev * steps`` grid
+    whenever partitions are imbalanced.  ``grid_layout="sharded"`` (pod
+    scale) instead maps the (N_dev, rows_cap, ...) padded grid — and a
+    device plan's per-device T-CSR events — over "part": per-device H2D
+    is O(own rows) and no host ever needs another host's rows
+    (``plan_epoch(layout="sharded")`` emits this layout).  With
+    ``host_replay`` the legacy per-device replayed grids are mapped over
+    the device axis.
 
     With ``device_plan`` the executor takes two extra operands — the
-    (N_dev, cap+1) mapped T-CSR ``indptr`` and the unmapped flat event
-    arrays — and the scanned step samples neighbor grids on device
-    (``plan_epoch(plan="device")`` emits both).  Note the vmap simulation
-    then routes sampling through whatever backend ``cfg`` selects; the
-    Pallas path is written for the per-device shard_map/SPMD layout.
+    (N_dev, cap+1) mapped T-CSR ``indptr`` and the event arrays (flat
+    replicated, or per-device mapped when sharded) — and the scanned step
+    samples neighbor grids on device (``plan_epoch(plan="device")`` emits
+    both).  Note the vmap simulation then routes sampling through
+    whatever backend ``cfg`` selects; the Pallas path is written for the
+    per-device shard_map/SPMD layout.
     """
+    if grid_layout not in ("replicated", "sharded"):
+        raise ValueError(f"grid_layout={grid_layout!r}")
+    if host_replay and grid_layout == "sharded":
+        raise ValueError("host_replay implies the replicated schedule")
+    sharded = grid_layout == "sharded"
+    grid_mapped = host_replay or sharded
     kernel = functools.partial(
         device_epoch, cfg=cfg, opt=opt, steps=steps, capacity=capacity,
         sync_mode=sync_mode, host_replay=host_replay,
     )
 
     if mesh is None:
-        in_axes = [None, None, 0 if host_replay else None, 0, 0, 0, 0, 0]
+        in_axes = [None, None, 0 if grid_mapped else None, 0, 0, 0, 0, 0]
         if device_plan:
-            in_axes += [0, None]       # indptr mapped, flat events shared
+            # indptr always mapped; events mapped only when sharded
+            in_axes += [0, 0 if sharded else None]
         vmapped = jax.vmap(
             kernel,
             in_axes=tuple(in_axes),
@@ -570,20 +739,23 @@ def make_pac_epoch(
     def body(params, opt_state, batches, offsets, n_batches, nfeat_local,
              efeat, shared_local, *tcsr_args):
         squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
-        extra = (squeeze(tcsr_args[0]), tcsr_args[1]) if tcsr_args else ()
+        extra = ()
+        if tcsr_args:
+            extra = (squeeze(tcsr_args[0]),
+                     squeeze(tcsr_args[1]) if sharded else tcsr_args[1])
         p, o, state, losses = kernel(
             params, opt_state,
-            squeeze(batches) if host_replay else batches,
+            squeeze(batches) if grid_mapped else batches,
             squeeze(offsets), squeeze(n_batches),
             squeeze(nfeat_local), squeeze(efeat), squeeze(shared_local),
             *extra)
         expand = lambda t: jax.tree.map(lambda x: x[None], t)
         return p, o, expand(state), expand(losses)
 
-    in_specs = (rep, rep, part if host_replay else rep,
+    in_specs = (rep, rep, part if grid_mapped else rep,
                 part, part, part, part, part)
     if device_plan:
-        in_specs += (part, rep)
+        in_specs += (part, part if sharded else rep)
     smapped = compat.shard_map(
         body,
         mesh=mesh,
@@ -651,6 +823,13 @@ class PACResult:
         return np.array([float(l.mean()) for l in self.losses])
 
 
+def stage_replicated_tree(tree, mesh):
+    """Replicate every leaf of a pytree across all devices of ``mesh`` —
+    cross-process safe (params/optimizer state at the start of a
+    multi-process PAC run; epoch outputs then keep the placement)."""
+    return jax.tree.map(lambda x: stage_replicated(x, mesh), tree)
+
+
 _PAC_PROGRAMS_MAX = 8    # per-call LRU of compiled epoch executors
 
 
@@ -669,6 +848,7 @@ def pac_train(
     prefetch: bool = True,
     host_replay: bool = False,
     plan: str = "device",
+    grid_layout: Optional[str] = None,
     eval_graph: Optional[StreamSource] = None,
     eval_node_class: bool = False,
 ) -> PACResult:
@@ -687,10 +867,19 @@ def pac_train(
     keep results bit-identical to serial planning.  ``host_replay=True``
     selects the legacy host-side wrap-around replay plan (the parity
     oracle for the transfer-minimal device-side wrap, bit-identical).
-    Note: on a real ``mesh`` the flat grid is currently replicated across
-    devices (see ``make_pac_epoch``), so for near-balanced partitions on
-    memory-tight chips ``host_replay=True``'s device-sharded grids may be
-    the better placement until row-range grid sharding lands (ROADMAP).
+
+    ``grid_layout`` picks the grid/T-CSR placement: ``"sharded"`` (the
+    default whenever a ``mesh`` is given) row-range-shards the batch grid
+    and per-device T-CSR over "part" so each device transfers only its
+    own rows; ``"replicated"`` (the default for the vmap simulation, and
+    the bit-parity oracle) ships every device the flat grid.  On a mesh
+    spanning processes (``launch.mesh.make_tig_mesh``) each process
+    additionally PLANS only its own devices' rows
+    (``plan_epoch(local_ranks=...)``) and stages them with
+    ``make_array_from_process_local_data`` — host grid bytes and H2D stay
+    O(local devices) per host, and the Alg.2 shared-node memory sync
+    genuinely crosses hosts.  Every process must call ``pac_train`` with
+    identical arguments (standard SPMD contract).
 
     ``plan="device"`` (the default) ships each device only its raw-edge
     stream plus T-CSR and samples neighbor grids inside the scanned step
@@ -715,6 +904,25 @@ def pac_train(
         raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
     if host_replay:
         plan = "host"
+    if grid_layout is None:
+        grid_layout = "replicated" if (mesh is None or host_replay) \
+            else "sharded"
+    if grid_layout not in ("replicated", "sharded"):
+        raise ValueError(f"grid_layout={grid_layout!r}")
+    if host_replay and grid_layout == "sharded":
+        raise ValueError("host_replay implies grid_layout='replicated'")
+
+    # a mesh spanning >1 process: plan + stage only local devices' rows
+    mesh_procs = sorted({d.process_index
+                         for d in np.asarray(mesh.devices).flat}) \
+        if mesh is not None else []
+    multihost = len(mesh_procs) > 1
+    if multihost:
+        from repro.launch.mesh import local_part_ranks
+        ranks_np = local_part_ranks(mesh)
+    plan_ranks = ranks_np if (multihost and grid_layout == "sharded") \
+        else None
+
     small_parts = partition.node_lists()
     if isinstance(g_train, ShardedStream):
         time_scale = time_scale_of(g_train.column("t"))
@@ -724,6 +932,11 @@ def pac_train(
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt = adamw(lr=lr, max_grad_norm=1.0)
     opt_state = opt.init(params)
+    if multihost:
+        # replicate once across the whole (cross-process) mesh; epoch
+        # outputs keep the placement, so this happens only at init
+        params = stage_replicated_tree(params, mesh)
+        opt_state = stage_replicated_tree(opt_state, mesh)
 
     def build(ep: int) -> EpochPlan:
         rng_ep = epoch_rng(seed, ep, 11)
@@ -736,23 +949,60 @@ def pac_train(
                 small_parts, num_devices, np.random.default_rng(seed))
         return plan_epoch(g_train, node_lists, partition.shared_nodes,
                           cfg, rng_ep, time_scale=time_scale,
-                          host_replay=host_replay, plan=plan)
+                          host_replay=host_replay, plan=plan,
+                          layout=grid_layout, local_ranks=plan_ranks)
 
     def to_device(ep_plan: EpochPlan):
         offsets = ep_plan.offsets if ep_plan.offsets is not None else \
             np.zeros(num_devices, np.int32)
+        if not multihost:
+            # single process: jnp.asarray suffices for every layout (jit
+            # reshards at dispatch; all devices are addressable)
+            dev = [
+                {k: jnp.asarray(v) for k, v in ep_plan.batches.items()},
+                jnp.asarray(offsets),
+                jnp.asarray(ep_plan.n_batches),
+                jnp.asarray(ep_plan.nfeat_local),
+                jnp.asarray(ep_plan.efeat_local),
+                jnp.asarray(ep_plan.shared_local),
+            ]
+            if ep_plan.tcsr is not None:
+                dev.append(jnp.asarray(ep_plan.tcsr["indptr"]))
+                dev.append({k: jnp.asarray(v)
+                            for k, v in ep_plan.tcsr.items()
+                            if k != "indptr"})
+            return ep_plan, tuple(dev)
+
+        # multi-process staging: mapped operands assemble the global
+        # (N_dev, ...) array from THIS process's rows only (the olmax
+        # per-process-slice idiom); plan-global scalars are sliced to the
+        # local row range first.  Only a replicated grid layout ships
+        # full flat arrays (the cross-host parity oracle).
+        held_local = ep_plan.local_ranks is not None
+        part = lambda a: stage_partitioned(  # noqa: E731
+            np.asarray(a), mesh, num_devices)
+        g2l = lambda a: np.asarray(a)[ranks_np]  # noqa: E731
+        loc = (lambda a: np.asarray(a)) if held_local else g2l
+        sharded_grid = ep_plan.layout == "sharded"
+        # the replayed oracle grid is (N_dev, steps, ...) and mapped too
+        grid_mapped = sharded_grid or ep_plan.host_replay
+        grid_loc = loc if sharded_grid else g2l
         dev = [
-            {k: jnp.asarray(v) for k, v in ep_plan.batches.items()},
-            jnp.asarray(offsets),
-            jnp.asarray(ep_plan.n_batches),
-            jnp.asarray(ep_plan.nfeat_local),
-            jnp.asarray(ep_plan.efeat_local),
-            jnp.asarray(ep_plan.shared_local),
+            {k: (part(grid_loc(v)) if grid_mapped else
+                 stage_replicated(v, mesh))
+             for k, v in ep_plan.batches.items()},
+            part(g2l(offsets)),
+            part(g2l(ep_plan.n_batches)),
+            part(loc(ep_plan.nfeat_local)),
+            part(loc(ep_plan.efeat_local)),
+            part(g2l(ep_plan.shared_local)),
         ]
         if ep_plan.tcsr is not None:
-            dev.append(jnp.asarray(ep_plan.tcsr["indptr"]))
-            dev.append({k: jnp.asarray(v)
-                        for k, v in ep_plan.tcsr.items() if k != "indptr"})
+            dev.append(part(loc(ep_plan.tcsr["indptr"])))
+            dev.append({k: (part(loc(v)) if sharded_grid else
+                            stage_replicated(v, mesh))
+                        for k, v in ep_plan.tcsr.items()
+                        if k != "indptr"})
         return ep_plan, tuple(dev)
 
     # LRU of compiled epoch executors, mirroring make_eval_epoch's cache:
@@ -767,16 +1017,32 @@ def pac_train(
         # cfg is fixed per pac_train call, but the executor's compiled
         # shapes also depend on n_layers (per-layer grids) and the
         # lane-padded dims the MXU tier launches — key them explicitly so
-        # layer-count or padding-rule changes can't reuse a stale program
+        # layer-count or padding-rule changes can't reuse a stale program.
+        # The mesh and grid layout are part of the key too: a
+        # process-spanning mesh and the vmap simulation (or two meshes /
+        # layouts in one process) must never collide on the same program.
         key = (ep_plan.steps, ep_plan.capacity, ep_plan.edge_capacity,
                cfg.n_layers, _kops.lane_pad(cfg.dim),
-               _kops.lane_pad(cfg.msg_dim))
+               _kops.lane_pad(cfg.msg_dim), mesh, grid_layout)
         return lru_get(
             programs, key, _PAC_PROGRAMS_MAX,
             lambda: make_pac_epoch(
                 cfg, opt, ep_plan.steps, ep_plan.capacity, mesh=mesh,
                 sync_mode=sync_mode, host_replay=host_replay,
-                device_plan=(plan == "device")))
+                device_plan=(plan == "device"), grid_layout=grid_layout))
+
+    if multihost:
+        # host values of cross-process arrays: reshard to fully
+        # replicated (the all-gather over "part"), read the local shard
+        rep_shard = NamedSharding(mesh, P())
+        gather = jax.jit(lambda t: t, out_shardings=rep_shard)
+
+        def fetch(tree):
+            return jax.tree.map(
+                lambda x: np.asarray(x.addressable_data(0)), gather(tree))
+    else:
+        def fetch(tree):
+            return jax.tree.map(np.asarray, tree)
 
     all_losses = []
     last_plan = None
@@ -787,7 +1053,7 @@ def pac_train(
             ep_plan, dev = pf.get(ep)
             params, opt_state, states, losses = epoch_program(ep_plan)(
                 params, opt_state, *dev)
-            all_losses.append(np.asarray(losses))
+            all_losses.append(fetch(losses))
             last_plan = ep_plan
 
     if last_plan is None:
@@ -795,9 +1061,16 @@ def pac_train(
         # (plan of the epoch that WOULD have run, fresh stacked memories)
         last_plan = build(0)
         fresh = init_state(cfg, last_plan.capacity)
-        states = jax.tree.map(
+        states_host = jax.tree.map(
             lambda x: np.broadcast_to(
                 np.asarray(x), (num_devices,) + x.shape).copy(), fresh)
+        params_host = fetch(params) if multihost else params
+    else:
+        # host copies once: globalize_memory / run_protocol / the result
+        # run on host or the local default device, so cross-process arrays
+        # must be gathered out of the mesh first
+        states_host = fetch(states)
+        params_host = fetch(params) if multihost else params
 
     from repro.core.pac import derived_speedup as dsp
 
@@ -814,16 +1087,16 @@ def pac_train(
             tables_j = {k: jnp.asarray(v) for k, v in make_tables(
                 eval_graph.edge_feat, eval_graph.node_feat).items()}
         warm = globalize_memory(
-            jax.tree.map(np.asarray, states), last_plan, splits.num_nodes,
+            states_host, last_plan, splits.num_nodes,
             cfg, time_rescale=time_scale / splits.time_scale)
         metrics = run_protocol(
-            params, cfg, splits, tables_j, seed=seed,
+            params_host, cfg, splits, tables_j, seed=seed,
             eval_node_class=eval_node_class, state=warm,
             replay_train=False)
 
     return PACResult(
-        params=params,
-        memory_states=jax.tree.map(np.asarray, states),
+        params=params_host,
+        memory_states=states_host,
         losses=all_losses,
         derived_speedup=dsp(last_plan.edges_per_device),
         edges_per_device=last_plan.edges_per_device,

@@ -150,7 +150,12 @@ def scan_train_epoch(
     runs ``wrap_steps`` lockstep steps, gathering batch
     ``wrap_offset + s % cycle_length`` on device.  Identical semantics to
     handing in a host-replayed (wrap_steps, ...) grid, at
-    O(cycle_length) instead of O(wrap_steps) host/transfer bytes.
+    O(cycle_length) instead of O(wrap_steps) host/transfer bytes.  The
+    pod-scale row-range-sharded layout (``plan_epoch(layout="sharded")``)
+    reuses this path with ``wrap_offset == 0``: each device holds only
+    its OWN zero-padded (rows_cap, ...) grid slab, and since
+    ``s % cycle_length < cycle_length`` the gather never reads a padding
+    row.
 
     With ``tcsr`` (a staged ``ChronoNeighborIndex.device_export`` dict),
     ``batches`` is a raw-edge program (``plan="device"``) and each step

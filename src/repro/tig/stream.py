@@ -61,6 +61,8 @@ __all__ = [
     "write_jodie_shards",
     "iter_jodie_blocks",
     "stage_device_tables",
+    "stage_partitioned",
+    "stage_replicated",
     "EpochPrefetcher",
 ]
 
@@ -473,6 +475,41 @@ def stage_device_tables(shards: ShardedStream) -> dict:
             nfeat = update(nfeat, jnp.asarray(chunk),
                            jnp.asarray(lo_, jnp.int32))
     return {"efeat": efeat, "nfeat": nfeat}
+
+
+# ======================================================================
+# multi-process (pod) staging
+# ======================================================================
+
+def stage_partitioned(local_rows: np.ndarray, mesh, n_global: int):
+    """Assemble a "part"-sharded global array from THIS process's rows.
+
+    ``local_rows`` holds only the rows of the caller's local devices
+    (contiguous on the mesh's "part" axis — ``launch.mesh.make_tig_mesh``
+    ordering); each process calls this with its own slice and jax stitches
+    the global (n_global, ...) array without any process ever holding the
+    full buffer — the olmax per-process-slice idiom, with the gather left
+    implicit in the array's sharding instead of an eager ``all_gather``.
+    Host bytes and H2D per process stay O(local devices).
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    local_rows = np.ascontiguousarray(local_rows)
+    spec = PartitionSpec("part", *([None] * (local_rows.ndim - 1)))
+    return jax.make_array_from_process_local_data(
+        NamedSharding(mesh, spec), local_rows,
+        (n_global,) + local_rows.shape[1:])
+
+
+def stage_replicated(x, mesh):
+    """Stage ``x`` fully replicated across every device of ``mesh``
+    (including non-addressable ones in a multi-process run)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.device_put(np.asarray(x), NamedSharding(mesh,
+                                                       PartitionSpec()))
 
 
 # ======================================================================

@@ -1,0 +1,189 @@
+"""Pod-scale PAC tests: row-range-sharded grid layout parity against the
+replicated oracle, per-process (local_ranks) planning, and a real
+2-process CPU cluster (gloo + ``jax.distributed.initialize``) compared to
+the single-process shard_map path."""
+
+import os
+import socket
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import sep_partition
+from repro.tig.data import synthetic_tig
+from repro.tig.distributed import pac_train, plan_epoch
+from repro.tig.graph import chronological_split
+from repro.tig.models import TIGConfig
+from repro.tig.train import time_scale_of
+
+CFG = TIGConfig(flavor="tgn", dim=16, dim_time=8, dim_edge=16, dim_node=16,
+                num_neighbors=4, batch_size=50)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def setup_case(seed=0, num_parts=4, k=0.05, name="tiny"):
+    g = synthetic_tig(name, seed=seed)
+    train_g, _, _, _ = chronological_split(g)
+    part = sep_partition(train_g.src, train_g.dst, train_g.t,
+                         g.num_nodes, num_parts, k=k)
+    return g, train_g, part
+
+
+def test_sharded_layout_is_bit_identical_to_replicated():
+    """The acceptance oracle: the row-range-sharded grid layout must be
+    EXACTLY equal (not allclose) to the replicated flat layout — metrics,
+    params and memory — across 2 epochs with a shuffle-combine resync."""
+    g, train_g, part = setup_case(num_parts=8)
+    kw = dict(num_devices=4, epochs=2, seed=0, shuffle_parts=True,
+              plan="device", eval_graph=g)
+    rep = pac_train(train_g, part, CFG, grid_layout="replicated", **kw)
+    shd = pac_train(train_g, part, CFG, grid_layout="sharded", **kw)
+
+    for la, lb in zip(rep.losses, shd.losses):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(rep.params),
+                    jax.tree_util.tree_leaves(shd.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for key in ("mem", "mem2", "last"):
+        np.testing.assert_array_equal(rep.memory_states[key],
+                                      shd.memory_states[key])
+    assert rep.metrics and sorted(rep.metrics) == sorted(shd.metrics)
+    for key in rep.metrics:
+        np.testing.assert_array_equal(np.asarray(rep.metrics[key]),
+                                      np.asarray(shd.metrics[key]))
+    # and the sharded layout is why: each device's H2D input is a strict
+    # subset of the replicated broadcast
+    assert shd.plan.device_input_bytes() < rep.plan.device_input_bytes()
+
+
+def test_local_ranks_plan_matches_full_plan_rows():
+    """A process planning only its own devices (local_ranks) must derive
+    row-for-row the same sharded plan as full planning — the multi-host
+    staging contract — while materializing fewer bytes."""
+    g, train_g, part = setup_case()
+    scale = time_scale_of(train_g.t)
+
+    def plan(**kw):
+        return plan_epoch(train_g, part.node_lists(), part.shared_nodes,
+                          CFG, np.random.default_rng(0), time_scale=scale,
+                          plan="device", **kw)
+
+    full = plan(layout="sharded")
+    assert full.layout == "sharded"
+    assert (full.offsets == 0).all()
+    rows_cap = int(full.n_batches.max())
+    assert full.batches["src"].shape[:2] == (4, rows_cap)
+
+    for ranks in ([0, 1], [2, 3], [1]):
+        local = plan(layout="sharded", local_ranks=ranks)
+        # global schedule is identical on every process
+        np.testing.assert_array_equal(local.n_batches, full.n_batches)
+        np.testing.assert_array_equal(local.edges_per_device,
+                                      full.edges_per_device)
+        assert local.steps == full.steps
+        assert local.capacity == full.capacity
+        np.testing.assert_array_equal(local.local_ranks, ranks)
+        # materialized rows are exactly the full plan's rows for `ranks`
+        for key in full.batches:
+            np.testing.assert_array_equal(local.batches[key],
+                                          full.batches[key][ranks])
+        for key in full.tcsr:
+            np.testing.assert_array_equal(local.tcsr[key],
+                                          full.tcsr[key][ranks])
+        np.testing.assert_array_equal(local.nfeat_local,
+                                      full.nfeat_local[ranks])
+        np.testing.assert_array_equal(local.efeat_local,
+                                      full.efeat_local[ranks])
+        assert local.plan_bytes() == full.plan_bytes() * len(ranks) // 4
+
+    with pytest.raises(ValueError):
+        plan(layout="replicated", local_ranks=[0, 1])
+    with pytest.raises(ValueError):
+        plan(layout="sharded", host_replay=True)
+
+
+def _free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _cluster_cmd(out, *, num_processes, process_id, local_devices, port):
+    return [sys.executable, "-u", "-m", "repro.launch.pac_cluster",
+            "--num-processes", str(num_processes),
+            "--process-id", str(process_id),
+            "--coordinator", f"127.0.0.1:{port}",
+            "--local-devices", str(local_devices),
+            "--epochs", "2", "--parts", "8", "--seed", "0",
+            "--grid-layout", "sharded", "--out", str(out)]
+
+
+def test_two_process_cluster_matches_single_process(tmp_path):
+    """Spawn a real 2-process CPU cluster (2 devices per process, gloo
+    collectives) and compare against the single-process 4-device shard_map
+    path.  The two processes must agree bit-for-bit with each other;
+    against the single process, protocol metrics are bit-identical and
+    params/losses/memory agree to collective-reduction-order tolerance
+    (gloo vs single-process XLA reductions associate differently)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+
+    outs = [tmp_path / "p0.npz", tmp_path / "p1.npz"]
+    for attempt in range(2):
+        port = _free_port()
+        procs = [
+            subprocess.Popen(
+                _cluster_cmd(outs[pid], num_processes=2, process_id=pid,
+                             local_devices=2, port=port),
+                cwd=REPO, env=env, stdout=subprocess.PIPE,
+                stderr=subprocess.STDOUT, text=True)
+            for pid in range(2)
+        ]
+        logs = []
+        try:
+            for p in procs:
+                out, _ = p.communicate(timeout=600)
+                logs.append(out)
+        except subprocess.TimeoutExpired:
+            for p in procs:
+                p.kill()
+            raise
+        if any(p.returncode == 17 or "CLUSTER_UNAVAILABLE" in log
+               for p, log in zip(procs, logs)):
+            pytest.skip(f"CPU cluster unavailable: {logs[0][-500:]}")
+        if all(p.returncode == 0 for p in procs):
+            break
+        if any(p.returncode > 0 for p in procs):  # a real error, not a
+            break                                 # coordinator signal-kill
+    if (any(p.returncode < 0 for p in procs)
+            and not any(p.returncode > 0 for p in procs)):
+        pytest.skip("cluster killed by coordinator twice (startup-skew "
+                    f"flake): {[p.returncode for p in procs]}")
+    for p, log in zip(procs, logs):
+        assert p.returncode == 0, log[-3000:]
+
+    single_out = tmp_path / "single.npz"
+    proc = subprocess.run(
+        _cluster_cmd(single_out, num_processes=1, process_id=0,
+                     local_devices=4, port=_free_port()),
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+
+    p0 = np.load(outs[0])
+    p1 = np.load(outs[1])
+    sg = np.load(single_out)
+    assert sorted(p0.files) == sorted(p1.files) == sorted(sg.files)
+    # SPMD: both processes hold the same replicated result, bit-for-bit
+    for key in p0.files:
+        np.testing.assert_array_equal(p0[key], p1[key], err_msg=key)
+    for key in sg.files:
+        if key.startswith("metric_"):
+            np.testing.assert_array_equal(p0[key], sg[key], err_msg=key)
+        else:
+            np.testing.assert_allclose(p0[key], sg[key], atol=1e-4,
+                                       err_msg=key)

@@ -186,3 +186,44 @@ def test_step_pipeline_bytes_fused_wins_and_itemizes():
     for p in out["detail"]:
         assert p.total == p.read_bytes + p.write_bytes
         assert all(v >= 0 for v in p.reads.values())
+
+
+# ------------------------------------------------- PAC pod byte models
+
+def test_pac_sync_bytes_scales_and_splits_dcn():
+    """The shared-node sync model: timestamp gather + winner-masked psum;
+    cross-host traffic is the ring hops that leave a host."""
+    from repro.roofline.kernel_bytes import pac_sync_bytes
+    one = pac_sync_bytes(n_shared=1000, d_mem=128, n_devices=4)
+    assert one["cross_host"] == 0 and one["dcn_fraction"] == 0.0
+    assert set(one["detail"]) == {"gather_ts", "psum_mem", "psum_mem2"}
+    # the C1 epilogue gathers only timestamps: the gather term is ~d-fold
+    # below the psum terms
+    assert one["detail"]["gather_ts"] * 16 < one["detail"]["psum_mem"]
+    two = pac_sync_bytes(n_shared=1000, d_mem=128, n_devices=4, n_hosts=2)
+    assert two["per_device"] == one["per_device"]
+    assert 0 < two["cross_host"] == int(two["per_device"] * 2 / 4)
+    mean = pac_sync_bytes(n_shared=1000, d_mem=128, n_devices=4,
+                          mode="mean")
+    assert "psum_ts" in mean["detail"] and "gather_ts" not in mean["detail"]
+    # more devices -> more link bytes per device (ring + gather terms)
+    assert pac_sync_bytes(1000, 128, 8)["per_device"] > one["per_device"]
+
+
+def test_pac_staging_sharded_strictly_below_replicated():
+    """Acceptance (satellite): sharded-grid staging bytes are strictly
+    below replicated staging for every >1-device mesh, per host and in
+    total — replicated ships sum-of-all-rows to each device, sharded only
+    the device's own padded rows."""
+    from repro.roofline.kernel_bytes import pac_staging_bytes
+    rows = [40, 11, 9, 5]            # imbalanced partitions
+    events = [8000, 2200, 1800, 1000]
+    out = pac_staging_bytes(rows, events, row_bytes=1050, n_hosts=2)
+    assert len(out["replicated"]) == len(out["sharded"]) == 2
+    for rep, sh in zip(out["replicated"], out["sharded"]):
+        assert sh < rep
+    assert out["total_sharded"] < out["total_replicated"]
+    assert out["per_device_sharded"] < out["per_device_replicated"]
+    # single device: the two layouts coincide (nothing to replicate)
+    single = pac_staging_bytes([7], [100], row_bytes=1050)
+    assert single["total_sharded"] == single["total_replicated"]
