@@ -1,0 +1,270 @@
+"""Epoch-boundary bubble benchmark: serial vs overlapped (async) boundary.
+
+PR 9 splits PAC's fused epoch program into a scan body plus a separable
+Alg.2 memory-sync epilogue and defers the per-epoch loss read to an async
+drain, so the boundary's cross-host collectives and D2H copies hide
+behind the next epoch instead of serializing the loop.  This module
+measures that bubble on the simulated 2-host pod and cross-checks the
+``roofline.pipeline_bubble`` model.
+
+Both disciplines run the REAL programs (``make_pac_epoch`` /
+``make_pac_sync`` on the vmap-simulated 4-device pod, bit-parity
+asserted between them); what is *simulated* is the data-center-network
+drain of the sync collectives.  On this one-CPU test rig the tiny
+scenario's real sync moves ~0.5 MB — far below dispatch overhead — so
+each epoch's drain is modeled as a sleep sized from
+``kernel_bytes.pac_sync_bytes`` at production pod scale (the busiest
+host of the 3-vs-1 split, DCN at ``DCN_GBPS``), exactly the constant the
+roofline model uses.  The serial loop pays that drain (and the loss
+fetch) inline every epoch; the overlapped loop dispatches the sync
+program plus an async loss copy and drains on background threads,
+paying one drain once, after the loop.
+
+Per-epoch boundary bubble (epoch 0 excluded — compile warmup):
+
+  * serial     = plan + stage + drain + fetch, all inline;
+  * overlapped = prefetcher wait (the plan+stage spill) + dispatch
+                 + (one final drain) / epochs.
+
+Asserted (CI runs this module): overlapped bubble >= 1.3x below serial,
+and the ``pipeline_bubble`` model's serial AND overlapped predictions
+each agree with the measurement within 25%.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+
+PART_GROUPS = ([0, 1, 2], [3, 4], [5, 6], [7])  # 8 SEP parts -> 4 devices
+HOSTS = ([0, 1, 2], [3])                        # 2 hosts, 3-vs-1 devices
+
+# production-scale pod constants for the simulated DCN drain: shared-node
+# memory of a wikipedia-scale run sharded 4 ways across 2 hosts
+POD_SHARED = 30_000     # shared (cut) nodes
+POD_D_MEM = 100         # memory width (TGN default)
+DCN_GBPS = 1.25         # 10 GbE data-center link
+EPOCHS = 4              # epoch 0 (pipeline fill) is excluded from stats
+
+
+def _build_case():
+    from repro.core import sep_partition
+    from repro.tig.data import synthetic_tig
+    from repro.tig.graph import chronological_split
+    from repro.tig.models import TIGConfig
+
+    g = synthetic_tig("tiny", seed=0)
+    train_g, _, _, _ = chronological_split(g)
+    cfg = TIGConfig(flavor="tgn", dim=16, dim_time=8, dim_edge=16,
+                    dim_node=16, num_neighbors=4, batch_size=50)
+    part = sep_partition(train_g.src, train_g.dst, train_g.t, g.num_nodes,
+                         len(PART_GROUPS) * 2, k=0.05)
+    return train_g, part, cfg
+
+
+def run(fast: bool = True):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pac import shuffle_combine
+    from repro.optim import adamw
+    from repro.roofline.kernel_bytes import pac_sync_bytes
+    from repro.roofline.pipeline_bubble import pipeline_bubble
+    from repro.tig.distributed import (make_pac_epoch, make_pac_sync,
+                                       plan_epoch)
+    from repro.tig.models import init_params
+    from repro.tig.stream import EpochPrefetcher
+    from repro.tig.train import epoch_rng, time_scale_of
+
+    train_g, part, cfg = _build_case()
+    n_dev = len(PART_GROUPS)
+    small = part.node_lists()
+    scale = time_scale_of(train_g.t)
+    seed = 0
+
+    # the simulated cross-host drain: the busiest host of the 3-vs-1 pod
+    # moves its local devices' DCN share of the sync collectives
+    sync_b = pac_sync_bytes(POD_SHARED, POD_D_MEM, n_dev,
+                            n_hosts=len(HOSTS), mode="latest")
+    n_busy = max(len(h) for h in HOSTS)
+    drain_s = sync_b["cross_host"] * n_busy / (DCN_GBPS * 1e9)
+    print(f"simulated pod drain: {sync_b['cross_host'] * n_busy / 1e6:.1f}"
+          f" MB cross-host on the {n_busy}-device host -> "
+          f"{drain_s * 1e3:.1f} ms/epoch at {DCN_GBPS} GB/s")
+
+    def build(ep):
+        rng_ep = epoch_rng(seed, ep, 11)
+        node_lists = shuffle_combine(small, n_dev, rng_ep)
+        return plan_epoch(train_g, node_lists, part.shared_nodes, cfg,
+                          rng_ep, time_scale=scale, plan="device")
+
+    def to_device(ep_plan):
+        dev = [
+            {k: jnp.asarray(v) for k, v in ep_plan.batches.items()},
+            jnp.asarray(ep_plan.offsets),
+            jnp.asarray(ep_plan.n_batches),
+            jnp.asarray(ep_plan.nfeat_local),
+            jnp.asarray(ep_plan.efeat_local),
+            jnp.asarray(ep_plan.shared_local),
+            jnp.asarray(ep_plan.tcsr["indptr"]),
+            {k: jnp.asarray(v) for k, v in ep_plan.tcsr.items()
+             if k != "indptr"},
+        ]
+        jax.block_until_ready(dev)
+        return ep_plan, tuple(dev)
+
+    opt = adamw(lr=1e-3, max_grad_norm=1.0)
+    progs: dict = {}
+
+    def programs(ep_plan, sync_epilogue):
+        key = (ep_plan.steps, ep_plan.capacity, sync_epilogue)
+        if key not in progs:
+            progs[key] = make_pac_epoch(
+                cfg, opt, ep_plan.steps, ep_plan.capacity,
+                sync_mode="latest", device_plan=True,
+                sync_epilogue=sync_epilogue)
+        return progs[key]
+
+    sync_p = make_pac_sync(sync_mode="latest")
+
+    # warm every program the timed loops will hit (shuffle-combine draws
+    # a few distinct (steps, capacity) shapes across epochs): compilation
+    # must not pollute mid-loop boundary timings
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.init(params)
+    for ep in range(EPOCHS):
+        ep_plan, dev = to_device(build(ep))
+        out = programs(ep_plan, True)(params, opt_state, *dev)
+        p2, o2, raw, l2 = programs(ep_plan, False)(
+            params, opt_state, *dev)
+        st = sync_p(raw, dev[5])
+        jax.block_until_ready((out, p2, o2, st, l2))
+
+    # ---------------------------------------------------------- serial
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.init(params)
+    plan_s, stage_s, scan_s, fetch_s, ser_bubble = [], [], [], [], []
+    ser_losses = []
+    for ep in range(EPOCHS):
+        with timer() as t_plan:
+            ep_plan = build(ep)
+        with timer() as t_stage:
+            ep_plan, dev = to_device(ep_plan)
+        fused = programs(ep_plan, sync_epilogue=True)
+        with timer() as t_scan:
+            params, opt_state, states, losses = fused(
+                params, opt_state, *dev)
+            jax.block_until_ready((params, opt_state, states, losses))
+        with timer() as t_fetch:
+            time.sleep(drain_s)             # the inline cross-host drain
+            ser_losses.append(np.asarray(losses))
+        if ep == 0:                          # steady state only
+            continue
+        plan_s.append(t_plan.s)
+        stage_s.append(t_stage.s)
+        scan_s.append(t_scan.s)
+        fetch_s.append(t_fetch.s - drain_s)
+        ser_bubble.append(t_plan.s + t_stage.s + t_fetch.s)
+    ser_params = params
+
+    # ------------------------------------------------------- overlapped
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.init(params)
+    get_s, disp_s = [], []
+    threads, ovl_losses = [], [None] * EPOCHS
+
+    def drain(ep, states, losses):
+        jax.block_until_ready(states)        # the sync program's output
+        time.sleep(drain_s)                  # its simulated DCN share
+        for leaf in jax.tree_util.tree_leaves(losses):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+        ovl_losses[ep] = np.asarray(losses)
+
+    with EpochPrefetcher(build, EPOCHS, to_device=to_device,
+                         depth=1) as pf:
+        for ep in range(EPOCHS):
+            with timer() as t_get:
+                ep_plan, dev = pf.get(ep)
+            scan_only = programs(ep_plan, sync_epilogue=False)
+            with timer() as t_disp:
+                params, opt_state, raw, losses = scan_only(
+                    params, opt_state, *dev)
+                states = sync_p(raw, dev[5])     # dispatched, not awaited
+                th = threading.Thread(target=drain,
+                                      args=(ep, states, losses))
+                th.start()
+                threads.append(th)
+            # the scan itself is identical across disciplines: excluded
+            # from the bubble in both loops
+            jax.block_until_ready((params, opt_state))
+            if ep == 0:
+                continue
+            get_s.append(t_get.s)
+            disp_s.append(t_disp.s)
+    with timer() as t_join:                  # the one end-of-loop drain
+        for th in threads:
+            th.join()
+    jax.block_until_ready(states)
+    ovl_params = params
+
+    # parity: split scan+sync and async drain must be bit-identical
+    for a, b in zip(ser_losses, ovl_losses):
+        np.testing.assert_array_equal(a, b)
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), ser_params, ovl_params)
+
+    n_meas = EPOCHS - 1
+    serial_b = float(np.mean(ser_bubble))
+    ovl_b = float(np.mean(get_s) + np.mean(disp_s) + t_join.s / n_meas)
+    ratio = serial_b / ovl_b
+
+    model = pipeline_bubble(
+        plan_s=float(np.mean(plan_s)), stage_s=float(np.mean(stage_s)),
+        sync_s=drain_s, fetch_s=float(np.mean(fetch_s)),
+        scan_s=float(np.mean(scan_s)), epochs=n_meas,
+        dispatch_s=float(np.mean(disp_s)))
+    err_serial = abs(model["serial_s"] - serial_b) / serial_b
+    err_ovl = abs(model["overlapped_s"] - ovl_b) / ovl_b
+
+    rows = [{
+        "epochs_measured": n_meas,
+        "drain_ms": drain_s * 1e3,
+        "plan_ms": float(np.mean(plan_s)) * 1e3,
+        "stage_ms": float(np.mean(stage_s)) * 1e3,
+        "scan_ms": float(np.mean(scan_s)) * 1e3,
+        "fetch_ms": float(np.mean(fetch_s)) * 1e3,
+        "dispatch_ms": float(np.mean(disp_s)) * 1e3,
+        "spill_ms": float(np.mean(get_s)) * 1e3,
+        "serial_bubble_ms": serial_b * 1e3,
+        "overlapped_bubble_ms": ovl_b * 1e3,
+        "bubble_speedup": ratio,
+        "model_serial_ms": model["serial_s"] * 1e3,
+        "model_overlapped_ms": model["overlapped_s"] * 1e3,
+        "model_err_serial": err_serial,
+        "model_err_overlapped": err_ovl,
+    }]
+    print(f"boundary bubble: serial {serial_b * 1e3:.1f} ms -> overlapped "
+          f"{ovl_b * 1e3:.1f} ms ({ratio:.2f}x); model "
+          f"{model['serial_s'] * 1e3:.1f} / "
+          f"{model['overlapped_s'] * 1e3:.1f} ms "
+          f"(err {err_serial:.1%} / {err_ovl:.1%})")
+
+    assert ratio >= 1.3, (
+        f"overlapped boundary bubble must be >= 1.3x below serial, got "
+        f"{ratio:.2f}x ({serial_b * 1e3:.1f} -> {ovl_b * 1e3:.1f} ms)")
+    assert err_serial <= 0.25 and err_ovl <= 0.25, (
+        f"pipeline_bubble model must agree within 25%: serial err "
+        f"{err_serial:.1%}, overlapped err {err_ovl:.1%}")
+
+    emit("epoch_pipeline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -17,6 +17,7 @@ MODULES = [
     "ingest_prefetch",
     "pac_plan",
     "pac_multihost",
+    "epoch_pipeline",
     "device_sampling",
     "protocol_sharded",
     "table3_efficiency",

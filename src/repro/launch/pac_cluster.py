@@ -49,6 +49,11 @@ def _parse(argv):
                     choices=["sharded", "replicated"])
     ap.add_argument("--sync-mode", default="latest",
                     choices=["latest", "mean"])
+    ap.add_argument("--epoch-boundary", default="overlap",
+                    choices=["overlap", "serial"],
+                    help="'overlap' pipelines the Alg.2 memory sync and "
+                         "loss reads behind the next epoch; 'serial' is "
+                         "the fused bit-parity oracle")
     ap.add_argument("--out", default="",
                     help="write losses/params/memory/metrics to this .npz")
     return ap.parse_args(argv)
@@ -103,7 +108,7 @@ def main(argv=None) -> int:
         train_g, part, cfg, num_devices=n_dev, epochs=args.epochs,
         seed=args.seed, shuffle_parts=True, sync_mode=args.sync_mode,
         mesh=mesh, plan="device", grid_layout=args.grid_layout,
-        eval_graph=g)
+        epoch_boundary=args.epoch_boundary, eval_graph=g)
 
     if args.out:
         payload = {}

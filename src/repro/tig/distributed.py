@@ -88,7 +88,7 @@ from repro.tig.batching import (
     pad_batch_programs,
 )
 from repro.tig.cache import lru_get
-from repro.tig.engine import scan_train_epoch
+from repro.tig.engine import donate_args as _donate, scan_train_epoch
 from repro.tig.graph import TemporalGraph
 from repro.tig.models import TIGConfig, init_params, init_state
 from repro.tig.protocol import time_scale_of
@@ -101,8 +101,9 @@ from repro.tig.stream import (
 )
 from repro.tig.train import epoch_rng
 
-__all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "pac_train",
-           "PACResult", "globalize_memory"]
+__all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "make_pac_sync",
+           "sync_shared_memory", "pac_train", "PACResult",
+           "globalize_memory"]
 
 StreamSource = Union[TemporalGraph, ShardedStream]
 
@@ -581,13 +582,17 @@ def device_epoch(
     sync_mode: Literal["latest", "mean"] = "latest",
     axis: str = "part",
     host_replay: bool = False,
+    sync_epilogue: bool = True,
 ):
     """One epoch on one device (runs under vmap or shard_map over ``axis``).
 
     The scan itself is the shared engine program (``engine.scan_train_epoch``
     with ``cycle_length`` = this device's real batch count and DDP gradient
     sync over ``axis``); the PAC-specific shared-node memory sync runs as
-    the epilogue below.
+    the ``sync_shared_memory`` epilogue.  ``sync_epilogue=False`` returns
+    the PRE-sync epoch-end state instead — the scan-only half of the
+    overlap boundary, whose caller dispatches ``make_pac_sync`` separately
+    so the collectives drain behind the next epoch.
 
     Default mode is the transfer-minimal plan: ``batches`` holds only real
     batches and the scan gathers ``offset + s % n_batches`` for each of the
@@ -622,36 +627,59 @@ def device_epoch(
             cfg=cfg, opt=opt, axis=axis, cycle_length=n_batches,
             wrap_steps=steps, wrap_offset=offset, tcsr=tcsr)
 
-    # shared-node memory synchronization (paper §II-C).
-    # §Perf iteration C1: instead of all-gathering the full (N_dev, S, d)
-    # replica rows (O(N*S*d) link bytes), gather only the (N_dev, S)
-    # timestamps, compute the argmax winner, and combine rows with a
-    # winner-masked psum — O(N*S + S*d) bytes, ~d-fold less traffic.
-    if shared_local.shape[0] > 0:
-        rows_m = state["mem"][shared_local]          # (S, d)
-        rows_m2 = state["mem2"][shared_local]
-        rows_t = state["last"][shared_local]         # (S,)
-        if sync_mode == "latest":
-            all_t = jax.lax.all_gather(rows_t, axis)     # (N_dev, S)
-            win = jnp.argmax(all_t, axis=0)              # (S,)
-            me = jax.lax.axis_index(axis)
-            mine = (win == me)[:, None].astype(rows_m.dtype)
-            new_m = jax.lax.psum(rows_m * mine, axis)
-            new_m2 = jax.lax.psum(rows_m2 * mine, axis)
-            new_t = jnp.max(all_t, axis=0)
-        else:
-            n = jax.lax.psum(1, axis)
-            new_m = jax.lax.psum(rows_m, axis) / n
-            new_m2 = jax.lax.psum(rows_m2, axis) / n
-            new_t = jax.lax.psum(rows_t, axis) / n
-        state = {
-            **state,
-            "mem": state["mem"].at[shared_local].set(new_m),
-            "mem2": state["mem2"].at[shared_local].set(new_m2),
-            "last": state["last"].at[shared_local].set(new_t),
-        }
+    if sync_epilogue:
+        state = sync_shared_memory(state, shared_local,
+                                   sync_mode=sync_mode, axis=axis)
 
     return params, opt_state, state, losses
+
+
+def sync_shared_memory(
+    state,
+    shared_local,   # (S,) int32 — this device's rows of the shared nodes
+    *,
+    sync_mode: Literal["latest", "mean"] = "latest",
+    axis: str = "part",
+):
+    """Shared-node memory synchronization (paper §II-C) for ONE device's
+    epoch-end state — runs under vmap or shard_map over ``axis``.
+
+    §Perf iteration C1: instead of all-gathering the full (N_dev, S, d)
+    replica rows (O(N*S*d) link bytes), gather only the (N_dev, S)
+    timestamps, compute the argmax winner, and combine rows with a
+    winner-masked psum — O(N*S + S*d) bytes, ~d-fold less traffic.
+
+    Factored out of ``device_epoch`` so the overlap boundary can dispatch
+    it as a SEPARATE program (``make_pac_sync``) right after the scan-only
+    epoch program: the cross-host collectives then drain while the next
+    epoch stages and dispatches, instead of serializing inside one fused
+    program.  The fused path (``device_epoch(sync_epilogue=True)``) calls
+    this same function, so the two boundaries share the sync math.
+    """
+    if shared_local.shape[0] == 0:
+        return state
+    rows_m = state["mem"][shared_local]          # (S, d)
+    rows_m2 = state["mem2"][shared_local]
+    rows_t = state["last"][shared_local]         # (S,)
+    if sync_mode == "latest":
+        all_t = jax.lax.all_gather(rows_t, axis)     # (N_dev, S)
+        win = jnp.argmax(all_t, axis=0)              # (S,)
+        me = jax.lax.axis_index(axis)
+        mine = (win == me)[:, None].astype(rows_m.dtype)
+        new_m = jax.lax.psum(rows_m * mine, axis)
+        new_m2 = jax.lax.psum(rows_m2 * mine, axis)
+        new_t = jnp.max(all_t, axis=0)
+    else:
+        n = jax.lax.psum(1, axis)
+        new_m = jax.lax.psum(rows_m, axis) / n
+        new_m2 = jax.lax.psum(rows_m2, axis) / n
+        new_t = jax.lax.psum(rows_t, axis) / n
+    return {
+        **state,
+        "mem": state["mem"].at[shared_local].set(new_m),
+        "mem2": state["mem2"].at[shared_local].set(new_m2),
+        "last": state["last"].at[shared_local].set(new_t),
+    }
 
 
 def make_pac_epoch(
@@ -665,6 +693,7 @@ def make_pac_epoch(
     host_replay: bool = False,
     device_plan: bool = False,
     grid_layout: str = "replicated",
+    sync_epilogue: bool = True,
 ):
     """Build the jitted epoch executor.
 
@@ -696,6 +725,16 @@ def make_pac_epoch(
     both).  Note the vmap simulation then routes sampling through
     whatever backend ``cfg`` selects; the Pallas path is written for the
     per-device shard_map/SPMD layout.
+
+    ``sync_epilogue=False`` builds the SCAN-ONLY half of the async epoch
+    boundary: the program returns the pre-sync epoch-end states (the
+    caller dispatches ``make_pac_sync`` on them separately so the
+    shared-node collectives drain behind the next epoch), and its
+    per-epoch plan operands — batch grids, feature tables, T-CSR — are
+    DONATED (non-CPU backends): the staging path re-materializes them
+    every epoch, so XLA may reuse their device buffers in place.  The
+    fused single-program path (``sync_epilogue=True``, the default) is
+    the bit-parity oracle for the split boundary.
     """
     if grid_layout not in ("replicated", "sharded"):
         raise ValueError(f"grid_layout={grid_layout!r}")
@@ -706,7 +745,15 @@ def make_pac_epoch(
     kernel = functools.partial(
         device_epoch, cfg=cfg, opt=opt, steps=steps, capacity=capacity,
         sync_mode=sync_mode, host_replay=host_replay,
+        sync_epilogue=sync_epilogue,
     )
+    # donated plan buffers (scan-only boundary): batches=2, nfeat=5,
+    # efeat=6 (+ the T-CSR operands, 8/9) are re-staged every epoch and
+    # consumed exactly once; shared_local (7) is NOT donated — the
+    # separate sync program reads it after the scan.  The fused oracle
+    # keeps its operands intact.
+    donate = () if sync_epilogue else _donate(
+        2, 5, 6, *((8, 9) if device_plan else ()))
 
     if mesh is None:
         in_axes = [None, None, 0 if grid_mapped else None, 0, 0, 0, 0, 0]
@@ -720,7 +767,6 @@ def make_pac_epoch(
             axis_name="part",
         )
 
-        @jax.jit
         def run(params, opt_state, batches, offsets, n_batches,
                 nfeat_local, efeat, shared_local, *tcsr_args):
             p, o, state, losses = vmapped(
@@ -731,7 +777,7 @@ def make_pac_epoch(
             o0 = jax.tree.map(lambda x: x[0], o)
             return p0, o0, state, losses
 
-        return run
+        return jax.jit(run, donate_argnums=donate)
 
     part = P("part")
     rep = P()
@@ -762,7 +808,40 @@ def make_pac_epoch(
         in_specs=in_specs,
         out_specs=(rep, rep, part, part),
     )
-    return jax.jit(smapped)
+    return jax.jit(smapped, donate_argnums=donate)
+
+
+def make_pac_sync(
+    *,
+    sync_mode: Literal["latest", "mean"] = "latest",
+    mesh: Optional[Mesh] = None,
+):
+    """Build the standalone jitted shared-node sync program —
+    ``(states, shared_local) -> states`` over stacked (N_dev, ...) inputs.
+
+    The separable half of the async epoch boundary: ``pac_train`` with
+    ``epoch_boundary="overlap"`` dispatches this right after the
+    scan-only epoch program and does NOT block on it, so the cross-host
+    ``all_gather``/``psum`` collectives drain while the worker thread
+    stages epoch e+1's plan and the main thread dispatches its scan.
+    Executors mirror ``make_pac_epoch``: vmap simulation (``mesh=None``)
+    or shard_map over the mesh's "part" axis.  The math is the same
+    ``sync_shared_memory`` the fused oracle runs.
+    """
+    kernel = functools.partial(sync_shared_memory, sync_mode=sync_mode)
+    if mesh is None:
+        return jax.jit(jax.vmap(kernel, in_axes=(0, 0), out_axes=0,
+                                axis_name="part"))
+
+    part = P("part")
+
+    def body(state, shared_local):
+        squeeze = lambda t: jax.tree.map(lambda x: x[0], t)  # noqa: E731
+        out = kernel(squeeze(state), squeeze(shared_local))
+        return jax.tree.map(lambda x: x[None], out)
+
+    return jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(part, part), out_specs=part))
 
 
 # ======================================================================
@@ -832,6 +911,21 @@ def stage_replicated_tree(tree, mesh):
 
 _PAC_PROGRAMS_MAX = 8    # per-call LRU of compiled epoch executors
 
+# Module-level LRU of the multihost host-read gather (jit identity that
+# reshards fully replicated).  One wrapper per MESH, persistent across
+# ``pac_train`` calls: rebuilding it per call discarded its trace cache,
+# so every call re-traced per distinct loss shape (``steps`` varies
+# across epochs) — the same retrace leak the epoch-program LRU fixes.
+_GATHER_PROGRAMS: dict = {}
+_GATHER_PROGRAMS_MAX = 8
+
+
+def _replicating_gather(mesh: Mesh):
+    return lru_get(
+        _GATHER_PROGRAMS, mesh, _GATHER_PROGRAMS_MAX,
+        lambda: jax.jit(lambda t: t,
+                        out_shardings=NamedSharding(mesh, P())))
+
 
 def pac_train(
     g_train: StreamSource,
@@ -846,6 +940,8 @@ def pac_train(
     sync_mode: Literal["latest", "mean"] = "latest",
     mesh: Optional[Mesh] = None,
     prefetch: bool = True,
+    depth: int = 1,
+    epoch_boundary: Literal["overlap", "serial"] = "overlap",
     host_replay: bool = False,
     plan: str = "device",
     grid_layout: Optional[str] = None,
@@ -863,10 +959,24 @@ def pac_train(
 
     With ``prefetch`` (the default) cycle e+1's host planning — shuffle-
     combine, localization, batch grids — and its host->device transfer run
-    on a worker thread while cycle e's scan executes; per-epoch RNG streams
-    keep results bit-identical to serial planning.  ``host_replay=True``
-    selects the legacy host-side wrap-around replay plan (the parity
-    oracle for the transfer-minimal device-side wrap, bit-identical).
+    on a worker thread while cycle e's scan executes (``depth`` host plans
+    may run ahead; device staging stays single-slot); per-epoch RNG
+    streams keep results bit-identical to serial planning.
+    ``host_replay=True`` selects the legacy host-side wrap-around replay
+    plan (the parity oracle for the transfer-minimal device-side wrap,
+    bit-identical).
+
+    ``epoch_boundary="overlap"`` (the default) makes the boundary itself
+    asynchronous: the epoch runs as a SCAN-ONLY program (plan buffers
+    donated), the Alg.2 shared-node memory sync is dispatched as a
+    separate program the main thread never blocks on (its cross-host
+    collectives drain behind epoch e+1's staging and scan), and the
+    per-epoch loss read becomes an async device->host copy collected once
+    after the loop.  ``"serial"`` is the fused-program oracle — scan+sync
+    in one program, blocking ``fetch`` per epoch — and is bit-identical
+    (the parity suite asserts exact equality of losses/params/memory/
+    metrics).  Disable pipelining entirely with ``prefetch=False`` /
+    ``depth=0`` + ``epoch_boundary="serial"`` when debugging.
 
     ``grid_layout`` picks the grid/T-CSR placement: ``"sharded"`` (the
     default whenever a ``mesh`` is given) row-range-shards the batch grid
@@ -902,6 +1012,10 @@ def pac_train(
 
     if plan not in ("host", "device"):
         raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
+    if epoch_boundary not in ("overlap", "serial"):
+        raise ValueError(f"epoch_boundary={epoch_boundary!r}: expected "
+                         "'overlap' or 'serial'")
+    overlap = epoch_boundary == "overlap"
     if host_replay:
         plan = "host"
     if grid_layout is None:
@@ -1023,38 +1137,76 @@ def pac_train(
         # layouts in one process) must never collide on the same program.
         key = (ep_plan.steps, ep_plan.capacity, ep_plan.edge_capacity,
                cfg.n_layers, _kops.lane_pad(cfg.dim),
-               _kops.lane_pad(cfg.msg_dim), mesh, grid_layout)
+               _kops.lane_pad(cfg.msg_dim), mesh, grid_layout,
+               epoch_boundary)
         return lru_get(
             programs, key, _PAC_PROGRAMS_MAX,
             lambda: make_pac_epoch(
                 cfg, opt, ep_plan.steps, ep_plan.capacity, mesh=mesh,
                 sync_mode=sync_mode, host_replay=host_replay,
-                device_plan=(plan == "device"), grid_layout=grid_layout))
+                device_plan=(plan == "device"), grid_layout=grid_layout,
+                sync_epilogue=not overlap))
+
+    def sync_program():
+        # shape-polymorphic (jit retraces per state/shared shape inside
+        # one wrapper), so a single cached program per mesh suffices
+        return lru_get(
+            programs, ("sync", mesh, sync_mode), _PAC_PROGRAMS_MAX,
+            lambda: make_pac_sync(sync_mode=sync_mode, mesh=mesh))
 
     if multihost:
         # host values of cross-process arrays: reshard to fully
         # replicated (the all-gather over "part"), read the local shard
-        rep_shard = NamedSharding(mesh, P())
-        gather = jax.jit(lambda t: t, out_shardings=rep_shard)
+        gather = _replicating_gather(mesh)
 
         def fetch(tree):
             return jax.tree.map(
                 lambda x: np.asarray(x.addressable_data(0)), gather(tree))
+
+        def drain_local(tree):        # tree already gathered replicated
+            return jax.tree.map(
+                lambda x: np.asarray(x.addressable_data(0)), tree)
     else:
         def fetch(tree):
             return jax.tree.map(np.asarray, tree)
+
+        drain_local = fetch
+
+    def drain_async(tree):
+        """Dispatch the device->host read WITHOUT blocking: reshard to
+        replicated (multihost) and start the copy; ``drain_local``
+        collects the host values once, after the loop."""
+        tree = gather(tree) if multihost else tree
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+        return tree
 
     all_losses = []
     last_plan = None
     states = None
     with EpochPrefetcher(build, epochs, to_device=to_device,
-                         enabled=prefetch) as pf:
+                         enabled=prefetch, depth=depth) as pf:
         for ep in range(epochs):
             ep_plan, dev = pf.get(ep)
-            params, opt_state, states, losses = epoch_program(ep_plan)(
-                params, opt_state, *dev)
-            all_losses.append(fetch(losses))
+            if overlap:
+                # scan-only program, then the sync epilogue as a separate
+                # dispatch the main thread never blocks on: its cross-host
+                # collectives drain while the worker stages epoch e+1 and
+                # the next scan is dispatched.  dev[5] is shared_local —
+                # the one plan operand the scan program does not donate.
+                params, opt_state, raw_states, losses = epoch_program(
+                    ep_plan)(params, opt_state, *dev)
+                states = sync_program()(raw_states, dev[5])
+                # deferred host read: async copy now, collect after loop
+                all_losses.append(drain_async(losses))
+            else:
+                params, opt_state, states, losses = epoch_program(ep_plan)(
+                    params, opt_state, *dev)
+                all_losses.append(fetch(losses))
             last_plan = ep_plan
+    if overlap:
+        all_losses = [drain_local(l) for l in all_losses]
 
     if last_plan is None:
         # epochs=0: nothing trained — still emit a consistent result

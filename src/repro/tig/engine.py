@@ -54,6 +54,7 @@ __all__ = [
     "scan_eval_stream",
     "make_train_epoch",
     "make_eval_epoch",
+    "donate_args",
 ]
 
 
@@ -61,10 +62,15 @@ def _tree_where(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def _donate_args(*argnums: int) -> tuple[int, ...]:
-    """Buffer donation saves one params+opt+memory copy per epoch, but CPU
-    jit only warns that donation is unimplemented — keep test logs clean."""
+def donate_args(*argnums: int) -> tuple[int, ...]:
+    """Buffer donation saves one params+opt+memory copy per epoch (and
+    lets the PAC scan-only program consume its per-epoch plan buffers in
+    place), but CPU jit only warns that donation is unimplemented — keep
+    test logs clean."""
     return argnums if jax.default_backend() != "cpu" else ()
+
+
+_donate_args = donate_args    # internal alias (pre-PR 9 name)
 
 
 def sample_batch_neighbors(batch, tcsr, batch_of, cfg: TIGConfig):

@@ -286,6 +286,7 @@ def run_protocol(
     seed: int = 0,
     eval_node_class: bool = False,
     prefetch: bool = True,
+    depth: int = 1,
     state=None,
     replay_train: bool = True,
 ) -> dict:
@@ -298,8 +299,8 @@ def run_protocol(
     ``lax.scan`` executes, split e+1's host plan is built AND moved to
     device on the ``EpochPrefetcher`` worker (plans are serial on one
     worker, so the neighbor-history handoff and the shared negative-
-    sampling RNG see the exact in-order call sequence — prefetch on/off is
-    bit-identical).
+    sampling RNG see the exact in-order call sequence — prefetch on/off,
+    at any pipeline ``depth``, is bit-identical).
 
     With ``replay_train=False`` the caller supplies post-train memory via
     ``state`` (e.g. PAC's synchronized per-device memories merged back to
@@ -342,7 +343,7 @@ def run_protocol(
     results = {}
     with EpochPrefetcher(build, len(views),
                          to_device=lambda b: (b, device_batches(b)),
-                         enabled=prefetch) as pf:
+                         enabled=prefetch, depth=depth) as pf:
         for i, view in enumerate(views):
             host, dev = pf.get(i)
             is_test = names[i] == "test"

@@ -516,30 +516,40 @@ def stage_replicated(x, mesh):
 # double-buffered epoch prefetch
 # ======================================================================
 
+_STOP = object()     # worker shutdown sentinel
+
+
 class EpochPrefetcher:
-    """Overlap host epoch planning with the device epoch (double-buffered).
+    """Depth-configurable epoch pipeline: host planning and device staging
+    run ahead of the consumer on ONE persistent worker thread.
 
-    ``build_fn(epoch)`` runs on ONE worker thread (plans stay in submission
-    order, so stateful planning RNGs see the serial call sequence);
+    ``build_fn(epoch)`` calls happen in strict submission order on the
+    single worker (stateful planning RNGs see the serial call sequence),
+    so results are bit-identical to inline planning for ANY ``depth``.
     ``to_device`` (e.g. ``jax.device_put`` / ``jnp.asarray`` mapping) also
-    runs on the worker, so the host->device transfer of plan e+1 proceeds
-    while the main thread blocks on epoch e's scan results.  numpy and jax
-    release the GIL for bulk work, so planning genuinely overlaps compute.
+    runs on the worker, behind a SINGLE async staging slot: up to ``depth``
+    host plans may be in flight, but at most one staged-but-unclaimed plan
+    holds device buffers — the next ``to_device`` starts only once the
+    consumer claims the previous one via ``get``.  Device memory stays
+    bounded at one epoch's plan (the double-buffer invariant) while deeper
+    pipelines absorb plan-time variance on the host side.  numpy and jax
+    release the GIL for bulk work, so planning/staging genuinely overlap
+    compute.
 
-        pf = EpochPrefetcher(build, epochs, to_device=stage)
-        for ep in range(epochs):
-            plan = pf.get(ep)      # plan e ready; e+1 starts building
-            ... run device epoch ...
+        with EpochPrefetcher(build, epochs, to_device=stage, depth=2) as pf:
+            for ep in range(epochs):
+                plan = pf.get(ep)   # plan e ready; e+1, e+2 in flight
+                ... run device epoch ...
 
-    ``get(e)`` retrieves plan e and then kicks off e+1, so e+1 builds on
-    the worker while the caller runs epoch e on device — exactly one plan
-    in flight, the double buffer.  Exceptions in the worker surface at the
+    ``get(e)`` retrieves plan e and refills the pipeline to ``depth``
+    epochs in flight.  Exceptions in the worker surface at the
     corresponding ``get`` (and cancel the pipeline: no further epoch is
-    submitted).
+    submitted).  ``depth=0`` — or ``enabled=False`` — disables the worker
+    entirely and builds inline.
 
     Also a context manager: ``with EpochPrefetcher(...) as pf:`` closes
     the pipeline on ANY exit — including an exception mid-epoch — so the
-    planner thread is joined instead of leaking past the failure.
+    worker thread is joined instead of leaking past the failure.
     """
 
     def __init__(
@@ -549,46 +559,84 @@ class EpochPrefetcher:
         *,
         to_device: Optional[Callable[[object], object]] = None,
         enabled: bool = True,
+        depth: int = 1,
     ):
+        if depth < 0:
+            raise ValueError(f"depth={depth}: expected >= 0")
         self._build = build_fn
         self._to_device = to_device
         self._n = num_epochs
-        self._enabled = enabled
+        self._depth = depth if enabled else 0
+        self._enabled = self._depth > 0
+        self._inbox: queue.Queue = queue.Queue()
         self._futures: dict[int, queue.Queue] = {}
-        self._threads: dict[int, threading.Thread] = {}
+        self._slot = threading.Semaphore(1)     # the device staging slot
+        self._closing = threading.Event()
+        self._worker: Optional[threading.Thread] = None
 
-    def _job(self, epoch: int, out: queue.Queue) -> None:
-        try:
-            plan = self._build(epoch)
-            if self._to_device is not None:
-                plan = self._to_device(plan)
-            out.put((True, plan))
-        except BaseException as exc:  # noqa: BLE001 — reraised at get()
-            out.put((False, exc))
+    def _worker_loop(self) -> None:
+        while True:
+            job = self._inbox.get()
+            if job is _STOP:
+                return
+            epoch, out = job
+            try:
+                plan = self._build(epoch)
+                if self._to_device is not None:
+                    self._slot.acquire()
+                    if self._closing.is_set():
+                        # close() raced us awake: the result would be
+                        # dropped anyway — skip staging, drain to the stop
+                        # sentinel
+                        self._slot.release()
+                        continue
+                    try:
+                        plan = self._to_device(plan)
+                    except BaseException:
+                        self._slot.release()
+                        raise
+                out.put((True, plan))
+            except BaseException as exc:  # noqa: BLE001 — reraised at get()
+                out.put((False, exc))
 
     def _submit(self, epoch: int) -> None:
         if epoch < 0 or epoch >= self._n or epoch in self._futures:
             return
+        if self._worker is None:
+            self._worker = threading.Thread(
+                target=self._worker_loop, daemon=True)
+            self._worker.start()
         out: queue.Queue = queue.Queue(maxsize=1)
-        th = threading.Thread(
-            target=self._job, args=(epoch, out), daemon=True)
         self._futures[epoch] = out
-        self._threads[epoch] = th
-        th.start()
+        self._inbox.put((epoch, out))
+
+    def _cancel(self) -> None:
+        """Drop every not-yet-claimed submission: no further builds start
+        (jobs the worker already began complete into orphaned queues)."""
+        self._n = 0
+        self._futures.clear()
+        while True:
+            try:
+                self._inbox.get_nowait()
+            except queue.Empty:
+                return
 
     def close(self) -> None:
-        """Stop the pipeline early: no further epochs will be submitted,
-        any in-flight build's worker thread is JOINED (bounded wait — at
-        most one plan is ever in flight), and its result is dropped for GC
-        instead of staying pinned (a full epoch plan, possibly on device)
-        while the caller moves on (e.g. patience-based early stop or an
-        exception unwinding the training loop)."""
-        self._n = 0
-        threads = list(self._threads.values())
-        self._futures.clear()
-        self._threads.clear()
-        for th in threads:
-            th.join()
+        """Stop the pipeline early: pending submissions are dropped, the
+        persistent worker is unparked (the staging slot is released so a
+        worker waiting to stage cannot deadlock the join) and JOINED in
+        bounded time — it finishes at most the job it already started,
+        then exits on the stop sentinel.  In-flight results are dropped
+        for GC instead of staying pinned (a full epoch plan, possibly on
+        device) while the caller moves on (e.g. patience-based early stop
+        or an exception unwinding the training loop)."""
+        self._closing.set()
+        self._cancel()
+        worker, self._worker = self._worker, None
+        if worker is not None:
+            self._slot.release()
+            self._inbox.put(_STOP)
+            worker.join()
 
     def __enter__(self) -> "EpochPrefetcher":
         return self
@@ -598,7 +646,8 @@ class EpochPrefetcher:
 
     def get(self, epoch: int):
         """Block until the plan for ``epoch`` is ready (building it inline
-        when prefetch is disabled) and start building ``epoch + 1``."""
+        when the pipeline is disabled) and refill the pipeline to
+        ``depth`` epochs in flight."""
         if not self._enabled:
             plan = self._build(epoch)
             if self._to_device is not None:
@@ -606,12 +655,12 @@ class EpochPrefetcher:
             return plan
         self._submit(epoch)
         out = self._futures.pop(epoch)
-        th = self._threads.pop(epoch)
         ok, plan = out.get()
-        th.join()
         if not ok:
+            self._cancel()      # the pipeline is poisoned past this epoch
             raise plan
-        # double buffer: next epoch starts building only after this one is
-        # done (one worker's worth of host memory in flight).
-        self._submit(epoch + 1)
+        if self._to_device is not None:
+            self._slot.release()    # claimed: free the staging slot
+        for nxt in range(epoch + 1, epoch + 1 + self._depth):
+            self._submit(nxt)
         return plan

@@ -166,6 +166,7 @@ def train_sharded(
     lr: float = 1e-3,
     seed: int = 0,
     prefetch: bool = True,
+    depth: int = 1,
     protocol: bool = False,
     patience: int = 2,
     eval_node_class: bool = False,
@@ -178,7 +179,10 @@ def train_sharded(
     the edge-feature table is staged shard-by-shard into a donated device
     buffer (the host never holds all rows), the temporal neighbor index is
     built with the chunked T-CSR merge, and epoch plans are prefetched on
-    a worker thread while the previous epoch's scan runs.  With
+    a worker thread while the previous epoch's scan runs (``depth`` epoch
+    plans may run ahead on the host; device staging stays single-slot, and
+    any depth is bit-identical — disable with ``prefetch=False`` /
+    ``depth=0`` when debugging).  With
     ``plan="device"`` (the default) the chunk-built T-CSR is additionally
     exported to device once and epochs ship raw-edge programs — neighbor
     grids are sampled inside the scan; ``plan="host"`` pre-samples them on
@@ -269,6 +273,7 @@ def train_sharded(
         epochs,
         to_device=device_batches,
         enabled=prefetch,
+        depth=depth,
     )
     losses, epoch_secs, val_curve = [], [], []
     state = None
@@ -322,7 +327,8 @@ def train_sharded(
                 params, state = restored["params"], restored["state"]
             metrics = run_protocol(
                 params, cfg, splits, tables_j, seed=seed,
-                eval_node_class=eval_node_class, prefetch=prefetch)
+                eval_node_class=eval_node_class, prefetch=prefetch,
+                depth=depth)
     finally:
         if own_tmp is not None:
             own_tmp.cleanup()
@@ -383,6 +389,7 @@ def train_single(
     seed: int = 0,
     eval_node_class: bool = False,
     prefetch: bool = True,
+    depth: int = 1,
     plan: str = "device",
 ) -> SingleResult:
     """The paper's single-device baseline trainer: chronological 70/15/15
@@ -392,8 +399,9 @@ def train_single(
     sub-graphs).  Each epoch is one host-planning pass (vectorized neighbor
     index + batch grid) followed by one scanned device program.  With
     ``prefetch`` (the default) epoch e+1's plan is built — and moved to
-    device — on a worker thread while epoch e's scan runs; per-epoch RNG
-    streams make the result bit-identical to serial planning.
+    device — on a worker thread while epoch e's scan runs (``depth`` host
+    plans may run ahead; device staging stays single-slot); per-epoch RNG
+    streams make the result bit-identical to serial planning at any depth.
 
     ``plan="device"`` (the default) stages each split's T-CSR once and
     ships raw-edge programs — the scanned step samples its own neighbor
@@ -441,6 +449,7 @@ def train_single(
         epochs,
         to_device=lambda pr: (device_batches(pr[0]), pr[1]),
         enabled=prefetch,
+        depth=depth,
     ) as pf:
         for ep in range(epochs):
             t0 = time.perf_counter()

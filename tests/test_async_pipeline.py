@@ -1,0 +1,117 @@
+"""Async epoch pipeline parity: the overlapped boundary and any pipeline
+depth must be bit-identical to the serial oracle for all three trainers.
+
+PR 9 makes the epoch boundary asynchronous (scan-only program + separable
+Alg.2 sync dispatch + deferred loss drain in ``pac_train``, depth-
+configurable ``EpochPrefetcher`` everywhere).  None of it may change a
+single bit: the serial fused path stays the oracle, and these tests
+assert exact equality of losses, params, memory, and metrics.  The
+2-process CPU-cluster case (overlap vs serial across real processes)
+lives in ``tests/test_pac_multihost.py``.
+"""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import sep_partition
+from repro.tig.data import synthetic_tig
+from repro.tig.distributed import pac_train
+from repro.tig.graph import chronological_split
+from repro.tig.models import TIGConfig
+from repro.tig.stream import write_graph_shards
+from repro.tig.train import train_single, train_sharded
+
+CFG = TIGConfig(flavor="tgn", dim=16, dim_time=8, dim_edge=16, dim_node=16,
+                num_neighbors=4, batch_size=50)
+
+
+def _tree_equal(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), a, b)
+
+
+def _losses_equal(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _pac_case(num_parts=8):
+    g = synthetic_tig("tiny", seed=0)
+    train_g, _, _, _ = chronological_split(g)
+    part = sep_partition(train_g.src, train_g.dst, train_g.t, g.num_nodes,
+                         num_parts, k=0.05)
+    return g, train_g, part
+
+
+@pytest.mark.parametrize("plan", ["device", "host"])
+def test_pac_overlap_matches_serial(plan):
+    """Scan-only + dispatched sync + deferred loss drain == the fused
+    serial oracle, bit for bit, for both plan modes (vmap layout)."""
+    g, train_g, part = _pac_case()
+    kw = dict(num_devices=4, epochs=2, seed=0, shuffle_parts=True,
+              plan=plan)
+    ser = pac_train(train_g, part, CFG, epoch_boundary="serial", **kw)
+    ovl = pac_train(train_g, part, CFG, epoch_boundary="overlap", **kw)
+    _losses_equal(ser.losses, ovl.losses)
+    _tree_equal(ser.params, ovl.params)
+    _tree_equal(ser.memory_states, ovl.memory_states)
+
+
+def test_pac_depth_and_prefetch_off_match():
+    """depth>1, depth=1, and the fully-serial prefetch=False loop all
+    produce identical results — including downstream protocol metrics
+    from the synchronized memories (eval_graph path)."""
+    g, train_g, part = _pac_case()
+    kw = dict(num_devices=4, epochs=2, seed=0, shuffle_parts=True,
+              plan="device", eval_graph=g)
+    base = pac_train(train_g, part, CFG, epoch_boundary="serial",
+                     prefetch=False, **kw)
+    d1 = pac_train(train_g, part, CFG, epoch_boundary="overlap",
+                   depth=1, **kw)
+    d3 = pac_train(train_g, part, CFG, epoch_boundary="overlap",
+                   depth=3, **kw)
+    for res in (d1, d3):
+        _losses_equal(base.losses, res.losses)
+        _tree_equal(base.params, res.params)
+        _tree_equal(base.memory_states, res.memory_states)
+        assert set(base.metrics) == set(res.metrics)
+        for k in base.metrics:
+            x, y = base.metrics[k], res.metrics[k]
+            assert (np.isnan(x) and np.isnan(y)) or x == y, \
+                f"{k}: {x} != {y}"
+
+
+def test_train_single_depths_match():
+    g = synthetic_tig("tiny", seed=13)
+    base = train_single(g, CFG, epochs=2, prefetch=False)
+    d1 = train_single(g, CFG, epochs=2, depth=1)
+    d3 = train_single(g, CFG, epochs=2, depth=3)
+    for res in (d1, d3):
+        assert base.losses == res.losses
+        assert base.val_ap == res.val_ap
+        assert base.test_ap == res.test_ap
+        assert base.test_ap_inductive == res.test_ap_inductive
+        _tree_equal(base.params, res.params)
+        _tree_equal(base.state, res.state)
+
+
+def test_train_sharded_protocol_depths_match(tmp_path):
+    g = synthetic_tig("tiny", seed=7)
+    sh = write_graph_shards(g, str(tmp_path / "sh"), shard_edges=500)
+    base = train_sharded(sh, CFG, epochs=2, protocol=True, patience=2,
+                         prefetch=False,
+                         ckpt_dir=str(tmp_path / "ck_base"))
+    d2 = train_sharded(sh, CFG, epochs=2, protocol=True, patience=2,
+                       depth=2, ckpt_dir=str(tmp_path / "ck_d2"))
+    assert base.losses == d2.losses
+    assert base.val_curve == d2.val_curve
+    assert base.best_epoch == d2.best_epoch
+    _tree_equal(base.params, d2.params)
+    _tree_equal(base.state, d2.state)
+    assert set(base.metrics) == set(d2.metrics)
+    for k in base.metrics:
+        x, y = base.metrics[k], d2.metrics[k]
+        assert (np.isnan(x) and np.isnan(y)) or x == y, f"{k}: {x} != {y}"

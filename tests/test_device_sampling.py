@@ -281,14 +281,14 @@ def test_prefetcher_context_manager_joins_on_exception():
             release.set()
             raise RuntimeError("boom")
     # __exit__ must have joined the worker and dropped pending epochs
-    assert pf._threads == {} and pf._futures == {}
+    assert pf._worker is None and pf._futures == {}
     assert workers and not workers[0].is_alive()
 
 
 def test_prefetcher_context_manager_plain_use():
     with EpochPrefetcher(lambda i: i * i, 3, enabled=True) as pf:
         assert [pf.get(i) for i in range(3)] == [0, 1, 4]
-    assert pf._threads == {} and pf._futures == {}
+    assert pf._worker is None and pf._futures == {}
 
 
 # ------------------------------------------------------- roofline model

@@ -112,14 +112,16 @@ def _free_port():
         return s.getsockname()[1]
 
 
-def _cluster_cmd(out, *, num_processes, process_id, local_devices, port):
+def _cluster_cmd(out, *, num_processes, process_id, local_devices, port,
+                 epoch_boundary="overlap"):
     return [sys.executable, "-u", "-m", "repro.launch.pac_cluster",
             "--num-processes", str(num_processes),
             "--process-id", str(process_id),
             "--coordinator", f"127.0.0.1:{port}",
             "--local-devices", str(local_devices),
             "--epochs", "2", "--parts", "8", "--seed", "0",
-            "--grid-layout", "sharded", "--out", str(out)]
+            "--grid-layout", "sharded",
+            "--epoch-boundary", epoch_boundary, "--out", str(out)]
 
 
 def test_two_process_cluster_matches_single_process(tmp_path):
@@ -128,7 +130,13 @@ def test_two_process_cluster_matches_single_process(tmp_path):
     path.  The two processes must agree bit-for-bit with each other;
     against the single process, protocol metrics are bit-identical and
     params/losses/memory agree to collective-reduction-order tolerance
-    (gloo vs single-process XLA reductions associate differently)."""
+    (gloo vs single-process XLA reductions associate differently).
+
+    The cluster runs the PR 9 async boundary (``--epoch-boundary
+    overlap``, the default: split scan+sync, deferred loss drain across
+    real processes) while the single-process comparison runs the fused
+    serial oracle — so this comparison is also the cross-process
+    pipelined-vs-serial parity case."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     env.pop("XLA_FLAGS", None)
@@ -170,7 +178,8 @@ def test_two_process_cluster_matches_single_process(tmp_path):
     single_out = tmp_path / "single.npz"
     proc = subprocess.run(
         _cluster_cmd(single_out, num_processes=1, process_id=0,
-                     local_devices=4, port=_free_port()),
+                     local_devices=4, port=_free_port(),
+                     epoch_boundary="serial"),
         cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
 

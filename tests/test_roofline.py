@@ -227,3 +227,56 @@ def test_pac_staging_sharded_strictly_below_replicated():
     # single device: the two layouts coincide (nothing to replicate)
     single = pac_staging_bytes([7], [100], row_bytes=1050)
     assert single["total_sharded"] == single["total_replicated"]
+
+
+# ------------------------------------------- epoch-boundary bubble model
+
+def test_pipeline_bubble_disciplines_ordered():
+    """overlapped <= prefetch <= serial, and the amortized end drain
+    shrinks with epoch count."""
+    from repro.roofline.pipeline_bubble import pipeline_bubble
+    kw = dict(plan_s=0.004, stage_s=0.002, sync_s=0.044, fetch_s=0.001,
+              scan_s=0.050, dispatch_s=0.004)
+    out = pipeline_bubble(epochs=3, **kw)
+    # plan+stage fit behind the scan: no spill
+    assert out["spill_s"] == 0.0
+    assert out["overlapped_s"] <= out["prefetch_s"] <= out["serial_s"]
+    assert out["serial_s"] == pytest.approx(0.004 + 0.002 + 0.044 + 0.001)
+    assert out["prefetch_s"] == pytest.approx(0.044 + 0.001)
+    assert out["overlapped_s"] == pytest.approx(0.004 + 0.045 / 3)
+    assert out["speedup_vs_serial"] == pytest.approx(
+        out["serial_s"] / out["overlapped_s"])
+    more = pipeline_bubble(epochs=30, **kw)
+    assert more["overlapped_s"] < out["overlapped_s"]
+
+
+def test_pipeline_bubble_spill_and_guards():
+    from repro.roofline.pipeline_bubble import pipeline_bubble
+    # planning longer than the scan: the spill is exposed everywhere
+    out = pipeline_bubble(plan_s=0.08, stage_s=0.02, sync_s=0.01,
+                          fetch_s=0.0, scan_s=0.04, epochs=2)
+    assert out["spill_s"] == pytest.approx(0.06)
+    assert out["prefetch_s"] == pytest.approx(0.06 + 0.01)
+    # degenerate all-zero boundary: speedups are inf, not a crash
+    free = pipeline_bubble(plan_s=0, stage_s=0, sync_s=0, fetch_s=0,
+                           scan_s=1, epochs=1)
+    assert free["overlapped_s"] == 0 and free["speedup_vs_serial"] == \
+        float("inf")
+    with pytest.raises(ValueError, match="epochs"):
+        pipeline_bubble(plan_s=0, stage_s=0, sync_s=0, fetch_s=0,
+                        scan_s=0, epochs=0)
+    with pytest.raises(ValueError, match="sync_s"):
+        pipeline_bubble(plan_s=0, stage_s=0, sync_s=-1, fetch_s=0,
+                        scan_s=0, epochs=1)
+
+
+def test_boundary_component_seconds_links():
+    from repro.roofline.pipeline_bubble import boundary_component_seconds
+    out = boundary_component_seconds(sync_bytes=1.25e9, staging_bytes=8e9,
+                                     plan_s=0.5)
+    assert out["sync_s"] == pytest.approx(1.0)   # 1.25 GB at 1.25 GB/s
+    assert out["stage_s"] == pytest.approx(1.0)  # 8 GB at 8 GB/s
+    assert out["plan_s"] == 0.5
+    with pytest.raises(ValueError, match="positive"):
+        boundary_component_seconds(sync_bytes=1, staging_bytes=1,
+                                   plan_s=0, dcn_gbps=0)

@@ -229,7 +229,7 @@ def test_prefetcher_close_detaches_pipeline():
     pf = EpochPrefetcher(lambda ep: ep, 5)
     assert pf.get(0) == 0            # submits epoch 1 in flight
     pf.close()                       # early stop: drop pending plans
-    assert pf._futures == {} and pf._threads == {}
+    assert pf._futures == {} and pf._worker is None
 
 
 def test_prefetcher_propagates_exceptions():
@@ -242,6 +242,94 @@ def test_prefetcher_propagates_exceptions():
     assert pf.get(0) == 0
     with pytest.raises(RuntimeError, match="boom"):
         pf.get(1)
+
+
+def test_prefetcher_single_persistent_worker():
+    """All plans are built by ONE worker thread (not one per epoch), and
+    they build in submission order at any depth."""
+    import threading
+
+    tids, built = [], []
+
+    def build(ep):
+        tids.append(threading.get_ident())
+        built.append(ep)
+        return ep
+
+    with EpochPrefetcher(build, 6, depth=3) as pf:
+        got = [pf.get(e) for e in range(6)]
+    assert got == list(range(6))
+    assert built == list(range(6))              # in-order at depth 3
+    assert len(set(tids)) == 1                  # one persistent worker
+    assert tids[0] != threading.get_ident()     # ... and not this thread
+
+
+def test_prefetcher_depth_gt1_matches_depth1():
+    for depth in (1, 2, 4):
+        with EpochPrefetcher(lambda ep: ep * 7, 5,
+                             to_device=lambda x: x + 1, depth=depth) as pf:
+            assert [pf.get(e) for e in range(5)] == \
+                [e * 7 + 1 for e in range(5)]
+
+
+def test_prefetcher_depth0_is_inline():
+    built = []
+
+    def build(ep):
+        built.append(ep)
+        return ep
+
+    with EpochPrefetcher(build, 3, depth=0) as pf:
+        assert pf._worker is None
+        assert [pf.get(e) for e in range(3)] == [0, 1, 2]
+        assert pf._worker is None               # never spawned a thread
+    with pytest.raises(ValueError, match="depth"):
+        EpochPrefetcher(build, 3, depth=-1)
+
+
+def test_prefetcher_exception_at_get_cancels_pipeline():
+    """A build error surfaces at get() of that epoch and poisons the rest
+    of the pipeline (no half-built plans leak; close() stays bounded)."""
+    def build(ep):
+        if ep == 1:
+            raise RuntimeError("boom")
+        return ep
+
+    with EpochPrefetcher(build, 6, depth=4) as pf:
+        assert pf.get(0) == 0
+        with pytest.raises(RuntimeError, match="boom"):
+            pf.get(1)
+        assert pf._futures == {}                # pending plans dropped
+
+
+def test_prefetcher_early_close_with_parked_worker():
+    """close() joins in bounded time even when the worker is parked on a
+    full device-staging slot (the patience-early-stop path)."""
+    import time
+
+    staged = []
+
+    def to_device(x):
+        staged.append(x)
+        return x
+
+    with EpochPrefetcher(lambda ep: ep, 10, to_device=to_device,
+                         depth=4) as pf:
+        assert pf.get(0) == 0
+        # give the worker time to build ahead and park on the single
+        # staging slot (epoch 1 staged and unclaimed, epoch 2 waiting)
+        deadline = time.monotonic() + 5.0
+        while len(staged) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        t0 = time.monotonic()
+        pf.close()
+        assert time.monotonic() - t0 < 5.0      # bounded join
+        assert pf._worker is None and pf._futures == {}
+    # plans past the close must never have been device-staged in the
+    # background after close() returned
+    n_after = len(staged)
+    time.sleep(0.05)
+    assert len(staged) == n_after
 
 
 # ------------------------------------------------- synthetic rewire parity
