@@ -18,6 +18,7 @@ MODULES = [
     "pac_plan",
     "pac_multihost",
     "epoch_pipeline",
+    "elastic_recovery",
     "device_sampling",
     "protocol_sharded",
     "table3_efficiency",

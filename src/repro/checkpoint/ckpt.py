@@ -4,6 +4,13 @@ Flattens any pytree of arrays into a single ``.npz`` with path-encoded keys,
 plus a tiny JSON manifest (step, metadata).  Sharded arrays are gathered to
 host before saving (fine at the scales this container trains); restore
 re-places values onto the target shardings when given.
+
+Writes are crash-atomic: both files land via write-to-``*.tmp`` + fsync +
+``os.replace``, and the manifest is written LAST so its presence marks a
+complete step.  ``latest_step`` only reports steps whose npz+manifest pair
+exists and loads — a process killed mid-save (the elastic PAC recovery
+path) leaves at worst a ``*.tmp`` orphan and a skipped step, never a
+restore that explodes later.
 """
 
 from __future__ import annotations
@@ -11,7 +18,7 @@ from __future__ import annotations
 import json
 import os
 import re
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -37,44 +44,105 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _names(directory: str, step: int) -> tuple[str, str]:
+    return (os.path.join(directory, f"ckpt_{step:08d}.npz"),
+            os.path.join(directory, f"ckpt_{step:08d}.json"))
+
+
+def _atomic_write(path: str, write_fn: Callable[[Any], None]) -> None:
+    """Write via a same-directory temp file, fsync, then rename into place
+    — a reader (or a resume after SIGKILL) sees either the old complete
+    file or the new complete file, never a torn write."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save_checkpoint(directory: str, step: int, tree, *,
                     metadata: Optional[dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    path, manifest_path = _names(directory, step)
     flat = _flatten(tree)
-    np.savez_compressed(path, **flat)
+    _atomic_write(path, lambda f: np.savez_compressed(f, **flat))
     manifest = {"step": step, "num_arrays": len(flat),
                 "metadata": metadata or {}}
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f)
+    # manifest last: its presence marks the step complete (latest_step
+    # requires the pair, so a kill between the two renames hides the step)
+    _atomic_write(manifest_path,
+                  lambda f: f.write(json.dumps(manifest).encode()))
     return path
 
 
+def _step_ok(directory: str, step: int) -> bool:
+    """A step counts only when its npz + manifest pair is present and both
+    parse — partial/corrupt leftovers of a killed writer are skipped."""
+    path, manifest_path = _names(directory, step)
+    if not (os.path.isfile(path) and os.path.isfile(manifest_path)):
+        return False
+    try:
+        with open(manifest_path) as f:
+            json.load(f)
+        # np.load reads the zip central directory (at EOF), so a truncated
+        # npz fails here instead of during restore
+        with np.load(path) as data:
+            data.files  # noqa: B018 — force the directory read
+    except Exception:
+        return False
+    return True
+
+
 def latest_step(directory: str) -> Optional[int]:
+    """Newest COMPLETE step in ``directory`` (corrupt/partial steps — a
+    lone npz, a torn zip, an unparsable manifest — are skipped, not
+    raised)."""
     if not os.path.isdir(directory):
         return None
-    steps = [int(m.group(1))
-             for fn in os.listdir(directory)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", fn))]
-    return max(steps) if steps else None
+    steps = sorted({int(m.group(1))
+                    for fn in os.listdir(directory)
+                    if (m := re.match(r"ckpt_(\d+)\.(npz|json)$", fn))},
+                   reverse=True)
+    for step in steps:
+        if _step_ok(directory, step):
+            return step
+    return None
 
 
 def restore_checkpoint(directory: str, step: int, target_tree,
                        shardings=None):
     """Restore into the structure of ``target_tree`` (shape/dtype checked).
 
+    Raises ``FileNotFoundError`` when the step does not exist and
+    ``ValueError`` — naming every offending key and what the checkpoint
+    actually holds — when the checkpoint's tree structure does not cover
+    the target (extra keys in the checkpoint are allowed: subset restore
+    is how best-val ``{params, state}`` is pulled out of a periodic
+    ``{params, opt_state, state}`` save).
+
     ``shardings``: optional matching pytree of jax.sharding.Sharding to
     device_put the restored leaves onto."""
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    path, _ = _names(directory, step)
+    if not os.path.isfile(path):
+        raise FileNotFoundError(f"no checkpoint for step {step} in "
+                                f"{directory!r}")
     data = np.load(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    keys = [_SEP.join(_path_str(p) for p in path_elems)
+            for path_elems, _leaf in paths]
+    missing = [k for k in keys if k not in data]
+    if missing:
+        raise ValueError(
+            f"checkpoint {path!r} does not match the target tree "
+            f"structure: missing {len(missing)}/{len(keys)} keys "
+            f"{missing[:5]}{'...' if len(missing) > 5 else ''}; "
+            f"checkpoint holds {sorted(data.files)[:8]}"
+            f"{'...' if len(data.files) > 8 else ''}")
     leaves = []
     shard_leaves = (jax.tree.leaves(shardings)
                     if shardings is not None else [None] * len(paths))
-    for (path_elems, leaf), shard in zip(paths, shard_leaves):
-        key = _SEP.join(_path_str(p) for p in path_elems)
-        if key not in data:
-            raise KeyError(f"checkpoint missing {key!r}")
+    for key, (_path_elems, leaf), shard in zip(keys, paths, shard_leaves):
         arr = data[key]
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(

@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Literal, Optional, Union
 
 import jax
@@ -71,6 +72,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.core.pac import (
     CycleSchedule,
     build_subgraph,
@@ -99,6 +101,7 @@ from repro.tig.stream import (
     stage_partitioned,
     stage_replicated,
 )
+from repro.faults import FaultInjector, HostLossError, is_host_loss
 from repro.tig.train import epoch_rng
 
 __all__ = ["EpochPlan", "plan_epoch", "make_pac_epoch", "make_pac_sync",
@@ -947,6 +950,11 @@ def pac_train(
     grid_layout: Optional[str] = None,
     eval_graph: Optional[StreamSource] = None,
     eval_node_class: bool = False,
+    eval_warm: Literal["memory", "replay", "restart"] = "memory",
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    resume: bool = False,
+    faults: Optional[FaultInjector] = None,
 ) -> PACResult:
     """Train a TIG model with SEP partitions + PAC (the paper's pipeline).
 
@@ -1006,7 +1014,28 @@ def pac_train(
     rows (latest-timestamp rule, ``globalize_memory``) and val/test are
     scored from that warm state — the device replay of the train split is
     skipped, so ``metrics["train_ap"]`` is NaN.  Results attach to
-    ``PACResult.metrics``.
+    ``PACResult.metrics``.  ``eval_warm`` picks where that warm state
+    comes from: ``"memory"`` (the default — PAC's synchronized memories,
+    above), ``"replay"`` (the plain protocol oracle: replay the train
+    split), or ``"restart"`` (TIGER-style: fit a restarter head on
+    collected embeddings, rebuild memory in O(N) — the restarter is also
+    saved next to the checkpoints when ``ckpt_dir`` is set, so an elastic
+    relaunch can warm memory without any replay).
+
+    Fault tolerance: ``ckpt_dir`` + ``ckpt_every=k`` atomically saves
+    ``{params, opt_state, states}`` every k epochs (process 0 writes;
+    every process joins the gather).  ``resume=True`` restores
+    params/opt_state from the newest complete step and continues from the
+    following epoch — bit-identical to an uninterrupted run, because each
+    epoch's plan RNG and memory init depend only on ``(seed, ep)``.
+    Resuming past the final epoch re-emits a fresh-memory result (saved
+    states may be shaped for a different device count, so they are not
+    reloaded).  ``faults`` (default: parsed from ``$REPRO_FAULTS``)
+    deterministically injects failures at the named sites (``host_kill``,
+    ``staging_oom``, ``prefetch_worker``, ``sync_fail``); in a multi-host
+    run, any failure that classifies as a lost peer (``is_host_loss``)
+    is re-raised as ``HostLossError`` so ``launch.pac_cluster`` can
+    re-form the world over the survivors.
     """
     from repro.optim import adamw
 
@@ -1025,6 +1054,12 @@ def pac_train(
         raise ValueError(f"grid_layout={grid_layout!r}")
     if host_replay and grid_layout == "sharded":
         raise ValueError("host_replay implies grid_layout='replicated'")
+    if eval_warm not in ("memory", "replay", "restart"):
+        raise ValueError(f"eval_warm={eval_warm!r}: expected 'memory', "
+                         "'replay' or 'restart'")
+    if resume and not ckpt_dir:
+        raise ValueError("resume=True needs ckpt_dir")
+    injector = faults if faults is not None else FaultInjector.from_env()
 
     # a mesh spanning >1 process: plan + stage only local devices' rows
     mesh_procs = sorted({d.process_index
@@ -1053,6 +1088,7 @@ def pac_train(
         opt_state = stage_replicated_tree(opt_state, mesh)
 
     def build(ep: int) -> EpochPlan:
+        injector.fire("prefetch_worker", epoch=ep)
         rng_ep = epoch_rng(seed, ep, 11)
         if shuffle_parts and len(small_parts) > num_devices:
             node_lists = shuffle_combine(small_parts, num_devices, rng_ep)
@@ -1067,6 +1103,7 @@ def pac_train(
                           layout=grid_layout, local_ranks=plan_ranks)
 
     def to_device(ep_plan: EpochPlan):
+        injector.fire("staging_oom")
         offsets = ep_plan.offsets if ep_plan.offsets is not None else \
             np.zeros(num_devices, np.int32)
         if not multihost:
@@ -1182,47 +1219,88 @@ def pac_train(
                 leaf.copy_to_host_async()
         return tree
 
+    start_epoch = 0
+    if resume:
+        step = latest_step(ckpt_dir)
+        if step is not None:
+            # restore on host (fetch is a collective in multihost: every
+            # process joins), then re-stage exactly like the fresh init
+            host = restore_checkpoint(ckpt_dir, step, {
+                "params": fetch(params), "opt_state": fetch(opt_state)})
+            if multihost:
+                params = stage_replicated_tree(host["params"], mesh)
+                opt_state = stage_replicated_tree(host["opt_state"], mesh)
+            else:
+                params = jax.tree.map(jnp.asarray, host["params"])
+                opt_state = jax.tree.map(jnp.asarray, host["opt_state"])
+            start_epoch = step + 1
+            print(f"PAC_RESUME: step {step} restored from {ckpt_dir}, "
+                  f"continuing at epoch {start_epoch}", flush=True)
+
+    ckpt_writer = (not multihost) or jax.process_index() == 0
+
     all_losses = []
     last_plan = None
     states = None
-    with EpochPrefetcher(build, epochs, to_device=to_device,
-                         enabled=prefetch, depth=depth) as pf:
-        for ep in range(epochs):
-            ep_plan, dev = pf.get(ep)
-            if overlap:
-                # scan-only program, then the sync epilogue as a separate
-                # dispatch the main thread never blocks on: its cross-host
-                # collectives drain while the worker stages epoch e+1 and
-                # the next scan is dispatched.  dev[5] is shared_local —
-                # the one plan operand the scan program does not donate.
-                params, opt_state, raw_states, losses = epoch_program(
-                    ep_plan)(params, opt_state, *dev)
-                states = sync_program()(raw_states, dev[5])
-                # deferred host read: async copy now, collect after loop
-                all_losses.append(drain_async(losses))
-            else:
-                params, opt_state, states, losses = epoch_program(ep_plan)(
-                    params, opt_state, *dev)
-                all_losses.append(fetch(losses))
-            last_plan = ep_plan
-    if overlap:
-        all_losses = [drain_local(l) for l in all_losses]
+    try:
+        with EpochPrefetcher(build, epochs, to_device=to_device,
+                             enabled=prefetch, depth=depth) as pf:
+            for ep in range(start_epoch, epochs):
+                injector.fire("host_kill", epoch=ep)
+                ep_plan, dev = pf.get(ep)
+                if overlap:
+                    # scan-only program, then the sync epilogue as a
+                    # separate dispatch the main thread never blocks on:
+                    # its cross-host collectives drain while the worker
+                    # stages epoch e+1 and the next scan is dispatched.
+                    # dev[5] is shared_local — the one plan operand the
+                    # scan program does not donate.
+                    params, opt_state, raw_states, losses = epoch_program(
+                        ep_plan)(params, opt_state, *dev)
+                    injector.fire("sync_fail", epoch=ep)
+                    states = sync_program()(raw_states, dev[5])
+                    # deferred host read: async copy now, collect after
+                    # the loop
+                    all_losses.append(drain_async(losses))
+                else:
+                    injector.fire("sync_fail", epoch=ep)
+                    params, opt_state, states, losses = epoch_program(
+                        ep_plan)(params, opt_state, *dev)
+                    all_losses.append(fetch(losses))
+                last_plan = ep_plan
+                if ckpt_dir and ckpt_every and (ep + 1) % ckpt_every == 0:
+                    # fetch is collective — all processes call it; only
+                    # process 0 touches the filesystem (atomic writes)
+                    snap = {"params": fetch(params),
+                            "opt_state": fetch(opt_state),
+                            "states": fetch(states)}
+                    if ckpt_writer:
+                        save_checkpoint(ckpt_dir, ep, snap,
+                                        metadata={"epoch": ep})
+        if overlap:
+            all_losses = [drain_local(l) for l in all_losses]
 
-    if last_plan is None:
-        # epochs=0: nothing trained — still emit a consistent result
-        # (plan of the epoch that WOULD have run, fresh stacked memories)
-        last_plan = build(0)
-        fresh = init_state(cfg, last_plan.capacity)
-        states_host = jax.tree.map(
-            lambda x: np.broadcast_to(
-                np.asarray(x), (num_devices,) + x.shape).copy(), fresh)
-        params_host = fetch(params) if multihost else params
-    else:
-        # host copies once: globalize_memory / run_protocol / the result
-        # run on host or the local default device, so cross-process arrays
-        # must be gathered out of the mesh first
-        states_host = fetch(states)
-        params_host = fetch(params) if multihost else params
+        if last_plan is None:
+            # epochs=0 (or resume past the end): nothing trained — still
+            # emit a consistent result (plan of the epoch that WOULD have
+            # run, fresh stacked memories)
+            last_plan = build(0)
+            fresh = init_state(cfg, last_plan.capacity)
+            states_host = jax.tree.map(
+                lambda x: np.broadcast_to(
+                    np.asarray(x), (num_devices,) + x.shape).copy(), fresh)
+            params_host = fetch(params) if multihost else params
+        else:
+            # host copies once: globalize_memory / run_protocol / the
+            # result run on host or the local default device, so
+            # cross-process arrays must be gathered out of the mesh first
+            states_host = fetch(states)
+            params_host = fetch(params) if multihost else params
+    except Exception as exc:
+        if multihost and is_host_loss(exc):
+            raise HostLossError(
+                f"peer lost during PAC training: {exc}") from exc
+        raise
 
     from repro.core.pac import derived_speedup as dsp
 
@@ -1238,13 +1316,31 @@ def pac_train(
         else:
             tables_j = {k: jnp.asarray(v) for k, v in make_tables(
                 eval_graph.edge_feat, eval_graph.node_feat).items()}
-        warm = globalize_memory(
-            states_host, last_plan, splits.num_nodes,
-            cfg, time_rescale=time_scale / splits.time_scale)
-        metrics = run_protocol(
-            params_host, cfg, splits, tables_j, seed=seed,
-            eval_node_class=eval_node_class, state=warm,
-            replay_train=False)
+        if eval_warm == "memory":
+            warm = globalize_memory(
+                states_host, last_plan, splits.num_nodes,
+                cfg, time_rescale=time_scale / splits.time_scale)
+            metrics = run_protocol(
+                params_host, cfg, splits, tables_j, seed=seed,
+                eval_node_class=eval_node_class, state=warm,
+                replay_train=False)
+        elif eval_warm == "replay":
+            # plain protocol oracle: replay the train split for memory
+            metrics = run_protocol(
+                params_host, cfg, splits, tables_j, seed=seed,
+                eval_node_class=eval_node_class, warm="replay")
+        else:  # "restart": TIGER-style replayless memory reconstruction
+            from repro.tig.restart import build_restarter, save_restarter
+
+            rst, _ = build_restarter(
+                params_host, cfg, splits, tables_j, seed=seed)
+            if ckpt_dir and ckpt_writer:
+                save_restarter(
+                    os.path.join(ckpt_dir, "restarter.npz"), rst)
+            metrics = run_protocol(
+                params_host, cfg, splits, tables_j, seed=seed,
+                eval_node_class=eval_node_class, warm="restart",
+                restarter=rst)
 
     return PACResult(
         params=params_host,

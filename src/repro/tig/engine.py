@@ -286,6 +286,9 @@ def scan_eval_stream(
                "neg_logit": aux["neg_logit"]}
         if collect_embeddings:
             out["src_embed"] = aux["src_embed"]
+            # dst too: the restarter's embedding bank needs coverage of
+            # nodes that only ever appear as destinations (bipartite TIGs)
+            out["dst_embed"] = aux["dst_embed"]
         return state, out
 
     return jax.lax.scan(scan_step, state,

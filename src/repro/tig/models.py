@@ -375,6 +375,7 @@ def step_loss(
         "pos_logit": pos_logit,
         "neg_logit": neg_logit,
         "src_embed": embeds["src"],
+        "dst_embed": embeds["dst"],
         "valid": valid,
     }
     return loss, (new_state, aux)

@@ -20,6 +20,7 @@ __all__ = [
     "rnn_init", "rnn",
     "attn_init", "temporal_attention",
     "stacked_attn_init", "stacked_temporal_attention",
+    "restarter_init", "restarter",
 ]
 
 
@@ -51,6 +52,25 @@ def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
         if i + 1 < n:
             x = jax.nn.relu(x)
     return x
+
+
+def restarter_init(key, d_in: int, d_mem: int, n_mem: int = 1,
+                   d_hidden: int | None = None) -> dict:
+    """TIGER-style restarter head: an MLP that maps a node's last collected
+    embedding (++ static features ++ Φ(Δt since that embedding)) back to
+    its memory row(s) — ``n_mem`` = 2 regresses TIGE's dual memory in one
+    head.  Reconstructing memory this way is O(N) in nodes instead of the
+    O(E) stream replay, which is what makes replayless warm-up
+    (``run_protocol(warm="restart")``) and host-loss recovery affordable."""
+    d_hidden = d_hidden if d_hidden is not None else max(2 * d_mem, d_in)
+    return mlp_init(key, [d_in, d_hidden, n_mem * d_mem])
+
+
+def restarter(p: dict, x: jnp.ndarray, d_mem: int,
+              n_mem: int = 1) -> jnp.ndarray:
+    """Apply the restarter head: (..., d_in) -> (..., n_mem, d_mem)."""
+    out = mlp(p, x)
+    return out.reshape(x.shape[:-1] + (n_mem, d_mem))
 
 
 def gru_init(key, d_in: int, d_h: int) -> dict:

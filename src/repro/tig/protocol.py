@@ -289,6 +289,8 @@ def run_protocol(
     depth: int = 1,
     state=None,
     replay_train: bool = True,
+    warm: Optional[str] = None,
+    restarter=None,
 ) -> dict:
     """The replay-to-warm-memory scoring driver (paper Tab.IV/V protocol).
 
@@ -302,11 +304,24 @@ def run_protocol(
     sampling RNG see the exact in-order call sequence — prefetch on/off,
     at any pipeline ``depth``, is bit-identical).
 
-    With ``replay_train=False`` the caller supplies post-train memory via
-    ``state`` (e.g. PAC's synchronized per-device memories merged back to
-    global rows) and the device replay of the train split is skipped: only
-    the neighbor history is reconstructed host-side from the train rows,
-    and scoring starts directly at val.  ``train_ap`` is then NaN.
+    ``warm`` names the memory warm-up strategy explicitly:
+
+      * ``"replay"``  — the oracle: replay the train split on device to
+        build memory (the default, equivalent to ``replay_train=True``);
+      * ``"state"``   — the caller supplies post-train memory via
+        ``state`` (e.g. PAC's synchronized per-device memories merged
+        back to global rows; equivalent to ``replay_train=False``);
+      * ``"restart"`` — TIGER-style replayless warm-up: memory is
+        reconstructed in O(N) by the fitted ``restarter`` bundle
+        (``tig.restart.build_restarter``) instead of the O(E) replay.
+        Metrics agree with the replay oracle within tolerance, not bits
+        (head fit error + the final batch's dropped pending messages).
+
+    With ``warm != "replay"`` the device replay of the train split is
+    skipped: only the neighbor history is reconstructed host-side from the
+    train rows, and scoring starts directly at val.  ``train_ap`` is then
+    NaN.  The legacy ``replay_train`` / ``state`` kwargs remain supported
+    (``warm=None`` infers ``"replay"`` or ``"state"`` from them).
 
     Returns a flat metric dict: ``val_ap``/``val_auc``/``test_ap``/
     ``test_auc`` (+ ``*_ap_inductive``/``*_auc_inductive`` over edges
@@ -314,6 +329,23 @@ def run_protocol(
     score, a sanity signal), and ``node_auroc`` (NaN unless
     ``eval_node_class`` and the stream carries labels).
     """
+    if warm is None:
+        warm = "replay" if replay_train else "state"
+    if warm not in ("replay", "state", "restart"):
+        raise ValueError(f"warm={warm!r}: expected 'replay', 'state' or "
+                         "'restart'")
+    if warm == "restart":
+        if restarter is None:
+            raise ValueError("warm='restart' needs a fitted restarter "
+                             "bundle (tig.restart.build_restarter)")
+        from repro.tig.restart import restart_memory
+
+        state = restart_memory(restarter, splits.num_nodes, tables_j)
+    elif warm == "state" and state is None:
+        raise ValueError("warm='state' needs the post-train memory via "
+                         "state=")
+    replay_train = warm == "replay"
+
     rng = np.random.default_rng(seed)
     eval_fn = make_eval_epoch(cfg)
     eval_fn_test = make_eval_epoch(cfg, collect_embeddings=True) \

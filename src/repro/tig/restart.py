@@ -1,0 +1,292 @@
+"""TIGER-style restarter: reconstruct node memory from embeddings.
+
+``run_protocol`` warms memory by replaying the train stream — O(E) work
+that every resume, mid-stream eval, and host-loss recovery re-pays.  TIGER
+(arXiv 2302.06057) observes that interaction-time *embeddings* carry
+enough information to regress the memory back: train a small head that
+maps a node's last collected embedding (plus static features and the time
+since that embedding) to its memory row, then "restart" memory anywhere
+with one O(N) forward pass.
+
+The pieces here:
+
+  * ``EmbeddingBank``     — per-node latest embedding / event time / seen
+                            mask, filled from a chronological stream
+                            (later events overwrite earlier ones);
+  * ``collect_bank``      — one forward-only replay of the train split
+                            with ``collect_embeddings`` that fills a bank
+                            AND returns the true replay-warm state (the
+                            restarter's supervision + the parity oracle);
+  * ``fit_restarter``     — full-batch MSE fit of the head (own trainable
+                            Φ time encoder, ``modules.restarter``) on the
+                            seen rows: predict mem (and mem2 for TIGE)
+                            from [emb ; nfeat ; Φ(t_end - t)];
+  * ``restart_memory``    — the payoff: an eval-ready state dict from the
+                            bank alone — predicted memory on seen rows,
+                            zeros elsewhere, ``last`` = bank event times,
+                            fresh (empty) pending-message store;
+  * ``build_restarter``   — collect + fit in one call (what ``pac_train``
+                            / benchmarks use);
+  * ``save_restarter`` / ``load_restarter`` — crash-atomic npz bundle so
+                            a recovered process can restart memory without
+                            owning the pre-crash replay.
+
+The replay path stays the parity oracle (repo pattern): ``restart_memory``
+approximates it — the pending messages of the final train batch are
+dropped (they are applied one batch later), and predicted memory carries
+the head's fit error — so consumers compare metrics within tolerance, not
+bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tig.batching import build_batch_program, stack_batches
+from repro.tig.engine import make_eval_epoch
+from repro.tig.models import TIGConfig, init_state
+from repro.tig.modules import restarter, restarter_init
+from repro.tig.time_encode import init_time_encoder, time_encode
+
+__all__ = [
+    "EmbeddingBank",
+    "Restarter",
+    "collect_bank",
+    "fit_restarter",
+    "restart_memory",
+    "build_restarter",
+    "save_restarter",
+    "load_restarter",
+]
+
+
+def _n_mem(cfg: TIGConfig) -> int:
+    return 2 if cfg.flavor == "tige" else 1
+
+
+@dataclasses.dataclass
+class EmbeddingBank:
+    """Latest interaction-time embedding per node, host-side.
+
+    ``emb[i]`` is node i's embedding at its most recent event, ``t[i]``
+    that event's (rescaled) time, ``seen[i]`` whether any event touched i.
+    ``t_end`` is the stream time the bank is warm to (Δt baseline for the
+    restarter's time encoding).
+    """
+
+    emb: np.ndarray     # (N, d) float32
+    t: np.ndarray       # (N,) float32
+    seen: np.ndarray    # (N,) bool
+    t_end: float = 0.0
+
+    @classmethod
+    def empty(cls, num_nodes: int, dim: int) -> "EmbeddingBank":
+        return cls(emb=np.zeros((num_nodes, dim), np.float32),
+                   t=np.zeros((num_nodes,), np.float32),
+                   seen=np.zeros((num_nodes,), bool))
+
+    def update(self, ids: np.ndarray, ts: np.ndarray,
+               embs: np.ndarray) -> None:
+        """Absorb a chronological run of events (row order = event order):
+        the LAST occurrence of each node wins."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return
+        ts = np.asarray(ts, np.float32)
+        embs = np.asarray(embs, np.float32)
+        # first occurrence in the reversed array = last occurrence forward
+        uniq, first_rev = np.unique(ids[::-1], return_index=True)
+        rows = len(ids) - 1 - first_rev
+        self.emb[uniq] = embs[rows]
+        self.t[uniq] = ts[rows]
+        self.seen[uniq] = True
+        self.t_end = max(self.t_end, float(ts.max()))
+
+
+@dataclasses.dataclass
+class Restarter:
+    """A fitted restarter bundle: head params + the bank they were fit on."""
+
+    params: dict            # {"time": Φ params, "head": mlp params}
+    cfg: TIGConfig
+    bank: EmbeddingBank
+    fit_mse: float = float("nan")
+
+
+def collect_bank(params, cfg: TIGConfig, splits, tables_j, *,
+                 seed: int = 0) -> tuple[EmbeddingBank, dict]:
+    """One forward-only replay of ``splits.train`` with embedding
+    collection: returns ``(bank, replay_state)`` where ``replay_state`` is
+    the true post-train memory (the restarter's regression target and the
+    replay-warm parity oracle).  This is the amortize-at-train-time cost —
+    every later ``restart_memory`` is O(N)."""
+    tr = splits.train
+    rng = np.random.default_rng(seed)
+    batches, _hist = build_batch_program(tr, cfg, rng,
+                                         neg_pool=splits.neg_pool)
+    if isinstance(batches, (list, tuple)):
+        batches = stack_batches(list(batches))
+    from repro.tig.protocol import device_batches
+
+    eval_fn = make_eval_epoch(cfg, collect_embeddings=True)
+    state, aux = eval_fn(params, init_state(cfg, splits.num_nodes),
+                         device_batches(batches), tables_j)
+
+    d = cfg.dim
+    valid = np.asarray(batches["valid"]).reshape(-1).astype(bool)
+    src = np.asarray(batches["src"]).reshape(-1)
+    dst = np.asarray(batches["dst"]).reshape(-1)
+    ts = np.asarray(batches["t"]).reshape(-1)
+    se = np.asarray(aux["src_embed"]).reshape(-1, d)
+    de = np.asarray(aux["dst_embed"]).reshape(-1, d)
+
+    # interleave src/dst per edge so within-batch ordering is the event
+    # order for BOTH endpoints (last write per node wins in the bank)
+    ids = np.stack([src, dst], axis=1).reshape(-1)
+    embs = np.stack([se, de], axis=1).reshape(-1, d)
+    times = np.repeat(ts, 2)
+    keep = np.repeat(valid, 2)
+
+    bank = EmbeddingBank.empty(splits.num_nodes, d)
+    bank.update(ids[keep], times[keep], embs[keep])
+    return bank, state
+
+
+def _head_inputs(rst_params: dict, cfg: TIGConfig, emb, nfeat, dt):
+    phi = time_encode(rst_params["time"], jnp.asarray(dt, jnp.float32))
+    return jnp.concatenate([jnp.asarray(emb, jnp.float32),
+                            jnp.asarray(nfeat, jnp.float32), phi], axis=-1)
+
+
+def fit_restarter(bank: EmbeddingBank, target_state, cfg: TIGConfig,
+                  tables_j, *, seed: int = 0, steps: int = 400,
+                  lr: float = 1e-2) -> Restarter:
+    """Fit the head by full-batch MSE on the bank's seen rows against the
+    replay-warm memory (``target_state``).  Small problem — |seen| rows of
+    width d — so a few hundred adamw steps converge in well under a
+    replay's wall time."""
+    from repro.optim import adamw
+
+    n_mem = _n_mem(cfg)
+    d_in = cfg.dim + cfg.dim_node + cfg.dim_time
+    key = jax.random.PRNGKey(seed)
+    rst_params = {"time": init_time_encoder(cfg.dim_time),
+                  "head": restarter_init(key, d_in, cfg.dim, n_mem)}
+
+    rows = np.flatnonzero(bank.seen)
+    if rows.size == 0:
+        return Restarter(params=rst_params, cfg=cfg, bank=bank)
+
+    mems = [np.asarray(target_state["mem"])[rows]]
+    if n_mem == 2:
+        mems.append(np.asarray(target_state["mem2"])[rows])
+    y = jnp.asarray(np.stack(mems, axis=1))           # (S, n_mem, d)
+    emb = jnp.asarray(bank.emb[rows])
+    nfeat = jnp.asarray(np.asarray(tables_j["nfeat"])[rows])
+    dt = jnp.asarray(np.maximum(bank.t_end - bank.t[rows], 0.0),
+                     jnp.float32)
+
+    opt = adamw(lr=lr)
+    opt_state = opt.init(rst_params)
+
+    @jax.jit
+    def step(p, o):
+        def loss_fn(p):
+            x = _head_inputs(p, cfg, emb, nfeat, dt)
+            pred = restarter(p["head"], x, cfg.dim, n_mem)
+            return jnp.mean((pred - y) ** 2)
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p, o = opt.apply(grads, o, p)
+        return p, o, loss
+
+    loss = jnp.zeros(())
+    for _ in range(steps):
+        rst_params, opt_state, loss = step(rst_params, opt_state)
+    return Restarter(params=rst_params, cfg=cfg, bank=bank,
+                     fit_mse=float(loss))
+
+
+def restart_memory(rst: Restarter, num_nodes: int, tables_j) -> dict:
+    """The replayless warm-up: an eval-ready state dict from the bank in
+    one O(N) head forward — predicted memory on seen rows, zeros (the
+    init value) elsewhere, ``last`` = each node's bank event time, and a
+    fresh pending-message store (the final batch's stashed messages are
+    the restart's information loss; TIGER accepts the same).  ``tables_j``
+    supplies the node-feature table the head consumes."""
+    cfg, bank = rst.cfg, rst.bank
+    if bank.emb.shape[0] != num_nodes:
+        raise ValueError(f"bank holds {bank.emb.shape[0]} nodes, caller "
+                         f"expects {num_nodes}")
+    n_mem = _n_mem(cfg)
+    state = init_state(cfg, num_nodes)
+    rows = np.flatnonzero(bank.seen)
+    if rows.size == 0:
+        return state
+    nfeat = np.asarray(tables_j["nfeat"])[rows]
+    dt = np.maximum(bank.t_end - bank.t[rows], 0.0)
+    x = _head_inputs(rst.params, cfg, bank.emb[rows], nfeat, dt)
+    pred = np.asarray(restarter(rst.params["head"], x, cfg.dim, n_mem))
+    mem = np.zeros((num_nodes + 1, cfg.dim), np.float32)
+    mem[rows] = pred[:, 0]
+    last = np.zeros((num_nodes + 1,), np.float32)
+    last[rows] = bank.t[rows]
+    state = dict(state)
+    state["mem"] = jnp.asarray(mem)
+    state["last"] = jnp.asarray(last)
+    if n_mem == 2:
+        mem2 = np.zeros((num_nodes + 1, cfg.dim), np.float32)
+        mem2[rows] = pred[:, 1]
+        state["mem2"] = jnp.asarray(mem2)
+    return state
+
+
+def build_restarter(params, cfg: TIGConfig, splits, tables_j, *,
+                    seed: int = 0, steps: int = 400,
+                    lr: float = 1e-2) -> tuple[Restarter, dict]:
+    """Collect the train-split embedding bank with ``params`` and fit the
+    head.  Returns ``(restarter, replay_state)`` — the second element is
+    the true replay-warm memory, kept as the parity oracle."""
+    bank, replay_state = collect_bank(params, cfg, splits, tables_j,
+                                      seed=seed)
+    rst = fit_restarter(bank, replay_state, cfg, tables_j, seed=seed,
+                        steps=steps, lr=lr)
+    return rst, replay_state
+
+
+# ------------------------------------------------------------- persistence
+
+def save_restarter(path: str, rst: Restarter) -> str:
+    """Crash-atomic npz bundle of the head params + bank (self-describing
+    keys: load needs no target tree)."""
+    from repro.checkpoint.ckpt import _atomic_write, _flatten
+
+    flat = {"bank|emb": rst.bank.emb, "bank|t": rst.bank.t,
+            "bank|seen": rst.bank.seen.astype(np.uint8),
+            "bank|t_end": np.float64(rst.bank.t_end),
+            "fit_mse": np.float64(rst.fit_mse)}
+    for k, v in _flatten(rst.params).items():
+        flat[f"params|{k}"] = v
+    _atomic_write(path, lambda f: np.savez_compressed(f, **flat))
+    return path
+
+
+def load_restarter(path: str, cfg: TIGConfig) -> Restarter:
+    data = np.load(path)
+    bank = EmbeddingBank(emb=data["bank|emb"], t=data["bank|t"],
+                         seen=data["bank|seen"].astype(bool),
+                         t_end=float(data["bank|t_end"]))
+    params: dict = {}
+    for key in data.files:
+        if not key.startswith("params|"):
+            continue
+        node = params
+        parts = key.split("|")[1:]
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = jnp.asarray(data[key])
+    return Restarter(params=params, cfg=cfg, bank=bank,
+                     fit_mse=float(data["fit_mse"]))

@@ -171,6 +171,7 @@ def train_sharded(
     patience: int = 2,
     eval_node_class: bool = False,
     ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
     plan: str = "device",
 ) -> ShardedResult:
     """Out-of-core training over a ``tig-shards-v1`` stream.
@@ -199,6 +200,10 @@ def train_sharded(
     best params —
     identical code (and identical numbers, given identical plans) to
     ``evaluate_params`` on the equivalent in-memory graph.
+
+    ``ckpt_every=k`` additionally writes a periodic fault-tolerance
+    checkpoint ``{params, opt_state, state}`` every k epochs (atomic
+    tmp+rename; needs ``ckpt_dir``).
     """
     from repro.tig.stream import stage_device_tables
 
@@ -289,6 +294,15 @@ def train_sharded(
                     tcsr=tcsr_tr)
                 epoch_secs.append(time.perf_counter() - t0)
                 losses.append(loss)
+                if ckpt_dir and ckpt_every and (ep + 1) % ckpt_every == 0:
+                    # periodic fault-tolerance snapshot: a superset of the
+                    # best-val pair (opt state included), written with the
+                    # same atomic tmp+rename protocol
+                    save_checkpoint(ckpt_dir, ep,
+                                    {"params": params,
+                                     "opt_state": opt_state,
+                                     "state": state},
+                                    metadata={"epoch": ep})
 
                 if not protocol:
                     continue
@@ -308,7 +322,9 @@ def train_sharded(
                     # is a consistent training point, not best params +
                     # later state
                     save_checkpoint(ckpt_dir, ep,
-                                    {"params": params, "state": state},
+                                    {"params": params,
+                                     "opt_state": opt_state,
+                                     "state": state},
                                     metadata={"val_ap": float(res_val["ap"])})
                 else:
                     bad += 1
@@ -391,6 +407,8 @@ def train_single(
     prefetch: bool = True,
     depth: int = 1,
     plan: str = "device",
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
 ) -> SingleResult:
     """The paper's single-device baseline trainer: chronological 70/15/15
     split, memory reset per epoch, val/test continue the epoch-end memory.
@@ -407,7 +425,11 @@ def train_single(
     ships raw-edge programs — the scanned step samples its own neighbor
     grids on device (``kernels.ops.neighbor_sample``), shrinking per-epoch
     H2D traffic to the edge records.  ``plan="host"`` keeps the pre-sampled
-    grids (the bit-parity oracle: identical metrics, losses, and memory)."""
+    grids (the bit-parity oracle: identical metrics, losses, and memory).
+
+    ``ckpt_dir`` + ``ckpt_every=k`` writes a periodic fault-tolerance
+    checkpoint ``{params, opt_state, state}`` every k epochs (atomic
+    tmp+rename, ``repro.checkpoint``)."""
     if plan not in ("host", "device"):
         raise ValueError(f"plan={plan!r}: expected 'host' or 'device'")
     splits = split_views(g)
@@ -460,6 +482,12 @@ def train_single(
                 tcsr=tcsr.get("train"))
             epoch_secs.append(time.perf_counter() - t0)
             losses.append(loss)
+            if ckpt_dir and ckpt_every and (ep + 1) % ckpt_every == 0:
+                # periodic fault-tolerance snapshot (atomic tmp+rename)
+                save_checkpoint(ckpt_dir, ep,
+                                {"params": params, "opt_state": opt_state,
+                                 "state": state},
+                                metadata={"epoch": ep})
 
             # validation continues from epoch-end memory + neighbor index
             if plan == "device" and "val" not in idx:

@@ -115,3 +115,103 @@ def test_train_sharded_protocol_depths_match(tmp_path):
     for k in base.metrics:
         x, y = base.metrics[k], d2.metrics[k]
         assert (np.isnan(x) and np.isnan(y)) or x == y, f"{k}: {x} != {y}"
+
+
+# ---------------------------------------------- prefetcher failure modes
+
+def _harnessed_prefetcher(spec, *, depth, epochs=6, stage=True):
+    """An ``EpochPrefetcher`` whose build/stage callbacks run under the
+    deterministic fault harness (``repro.faults``): the worker thread is
+    the component under test, the injector decides where it dies."""
+    from repro.faults import FaultInjector
+    from repro.tig.stream import EpochPrefetcher
+
+    inj = FaultInjector.parse(spec, process_index=0)
+    built = []
+
+    def build(ep):
+        inj.fire("prefetch_worker", epoch=ep)
+        built.append(ep)
+        return {"epoch": ep}
+
+    def to_device(plan):
+        inj.fire("staging_oom")
+        return dict(plan, staged=True)
+
+    pf = EpochPrefetcher(build, epochs,
+                         to_device=to_device if stage else None,
+                         depth=depth)
+    return pf, built
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_prefetcher_worker_fault_surfaces_at_get_and_poisons(depth):
+    """An injected build failure must surface at the corresponding
+    ``get`` — earlier epochs stay intact — and poison the pipeline: no
+    further epoch is submitted after the failing one."""
+    from repro.faults import InjectedFault
+
+    pf, built = _harnessed_prefetcher("prefetch_worker@epoch=2",
+                                      depth=depth)
+    with pf:
+        assert pf.get(0)["epoch"] == 0
+        assert pf.get(1)["staged"]
+        with pytest.raises(InjectedFault):
+            pf.get(2)
+    assert 2 not in built           # the faulted build produced nothing
+    assert all(ep < 2 + depth for ep in built)  # nothing submitted past it
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_prefetcher_staging_fault_and_bounded_close(depth):
+    """An injected staging OOM surfaces at ``get`` with the worker's slot
+    released: ``close`` after the failure must join in bounded time (the
+    regression here was a worker parked on the staging semaphore)."""
+    pf, _built = _harnessed_prefetcher("staging_oom@at=2", depth=depth)
+    with pf:
+        assert pf.get(0)["staged"]
+        with pytest.raises(MemoryError):
+            pf.get(1)
+    assert pf._worker is None       # close() actually joined the thread
+
+
+def test_prefetcher_fault_then_fresh_pipeline_recovers():
+    """The elastic contract at the pipeline level: after a poisoned
+    prefetcher is closed, a FRESH prefetcher over the remaining epochs
+    (what a restarted trainer builds) produces the same plans an
+    undisturbed run would."""
+    from repro.faults import InjectedFault
+
+    pf, _ = _harnessed_prefetcher("prefetch_worker@epoch=1", depth=2)
+    with pf:
+        assert pf.get(0)["epoch"] == 0
+        with pytest.raises(InjectedFault):
+            pf.get(1)
+    pf2, built2 = _harnessed_prefetcher("", depth=2)
+    with pf2:
+        got = [pf2.get(ep)["epoch"] for ep in range(1, 6)]
+    assert got == list(range(1, 6))
+    assert built2 == list(range(1, 6))  # finished epochs are never rebuilt
+
+
+def test_pac_train_epoch_zero_kill_leaves_resumable_ckpt(tmp_path):
+    """A staging fault AFTER the first checkpoint leaves a directory the
+    next ``pac_train`` call resumes from — the single-process analogue of
+    the 2-process host-kill case in ``test_elastic.py``."""
+    from repro.faults import FaultInjector
+
+    g, train_g, part = _pac_case()
+    kw = dict(num_devices=4, seed=0, shuffle_parts=True, plan="device")
+    d = str(tmp_path / "ckpt")
+
+    full = pac_train(train_g, part, CFG, epochs=2, **kw)
+    # staging call 3 = epoch 2's plan (epochs 0/1 stage as calls 1/2),
+    # so the crash lands after epoch 1's checkpoint is on disk
+    with pytest.raises(MemoryError):
+        pac_train(train_g, part, CFG, epochs=3, ckpt_dir=d, ckpt_every=1,
+                  faults=FaultInjector.parse("staging_oom@at=3",
+                                             process_index=0), **kw)
+    res = pac_train(train_g, part, CFG, epochs=2, ckpt_dir=d, resume=True,
+                    **kw)
+    assert res.losses == []          # everything up to epochs=2 was done
+    _tree_equal(full.params, res.params)

@@ -1,0 +1,97 @@
+"""Checkpoint hardening: atomic tmp+rename writes, corrupt/partial-step
+tolerance in ``latest_step``, and the subset-restore contract the elastic
+recovery path depends on."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def _tree(x=1.0):
+    return {"params": {"w": np.full((3, 2), x, np.float32),
+                       "b": np.zeros((2,), np.float32)},
+            "opt_state": {"mu": {"w": np.ones((3, 2), np.float32)}},
+            "state": {"mem": np.arange(6, dtype=np.float32)}}
+
+
+def test_save_leaves_no_tmp_files(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, _tree(), metadata={"epoch": 0})
+    names = sorted(os.listdir(d))
+    assert names == ["ckpt_00000000.json", "ckpt_00000000.npz"]
+    assert not any(".tmp" in n for n in names)
+
+
+def test_latest_step_skips_truncated_npz(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, _tree(1.0))
+    save_checkpoint(d, 1, _tree(2.0))
+    npz1 = os.path.join(d, "ckpt_00000001.npz")
+    with open(npz1, "r+b") as f:         # tear the newest step's zip
+        f.truncate(os.path.getsize(npz1) // 2)
+    assert latest_step(d) == 0
+    restored = restore_checkpoint(d, 0, _tree())
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  _tree(1.0)["params"]["w"])
+
+
+def test_latest_step_skips_manifestless_and_bad_manifest(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 3, _tree())
+    # a lone npz (killed between the two renames) must not count
+    np.savez(os.path.join(d, "ckpt_00000007.npz"), x=np.zeros(1))
+    # an unparsable manifest must not count either
+    save_checkpoint(d, 5, _tree())
+    with open(os.path.join(d, "ckpt_00000005.json"), "w") as f:
+        f.write("{not json")
+    assert latest_step(d) == 3
+
+
+def test_latest_step_empty_and_missing_dir(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_manifest_contents(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 2, _tree(), metadata={"epoch": 2, "val_ap": 0.5})
+    with open(os.path.join(d, "ckpt_00000002.json")) as f:
+        manifest = json.load(f)
+    assert manifest["step"] == 2
+    assert manifest["metadata"] == {"epoch": 2, "val_ap": 0.5}
+    assert manifest["num_arrays"] == 4
+
+
+def test_subset_restore_from_superset(tmp_path):
+    """The elastic contract: a periodic {params, opt_state, state} save
+    must restore into a smaller {params, state} template (extra keys in
+    the checkpoint are allowed)."""
+    d = str(tmp_path)
+    full = _tree(3.0)
+    save_checkpoint(d, 0, full)
+    sub = restore_checkpoint(d, 0, {"params": full["params"],
+                                    "state": full["state"]})
+    assert sorted(sub) == ["params", "state"]
+    np.testing.assert_array_equal(sub["params"]["w"], full["params"]["w"])
+
+
+def test_missing_keys_raise_value_error_naming_them(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"params": _tree()["params"]})
+    with pytest.raises(ValueError, match="opt_state"):
+        restore_checkpoint(d, 0, _tree())
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(d, 1, _tree())
+
+
+def test_restore_shape_mismatch(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, _tree())
+    bad = _tree()
+    bad["params"]["w"] = np.zeros((4, 4), np.float32)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(d, 0, bad)
